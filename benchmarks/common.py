@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: CSV emission + result capture."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results"))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, obj) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    p = RESULTS_DIR / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=1))
+    return p
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0
+        return False

@@ -1,0 +1,120 @@
+"""Paper Figures 5, 6, 7 — cost vs deadline curves per VM type.
+
+Fig 5: query R1 (=Q1 profile), 10 users.   Fig 6: R3 (=Q3), 10 users.
+Fig 7: R1, 20 users — exhibits the paper's headline crossover: at tight
+deadlines the bigger/faster VM type (CINECA 20-core) becomes cheaper than
+scaling out m4.xlarge instances.
+
+Each point: AMVA frontier proposes nu*, QN (replayer mode) verifies and the
+Algorithm-1 decrement/increment polishes — i.e., the full D-SPACE4Cloud
+loop per (deadline, VM type).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timer
+from repro.core.evaluators import amva_frontier, make_qn_evaluator
+from repro.core.hillclimb import optimize_class
+from repro.core.milp import initial_class_solution
+from repro.core.workloads import scenario_problem
+
+
+def sweep(query: str, users: int, deadlines_s: List[float],
+          quick: bool = False):
+    points = []
+    for d_s in deadlines_s:
+        prob, samples, _ = scenario_problem(query, users, d_s * 1000.0)
+        cls = prob.classes[0]
+        ev = make_qn_evaluator(min_jobs=15 if quick else 25,
+                               warmup_jobs=10, replications=1, seed=11,
+                               samples=samples)
+        for vm in prob.vm_types:
+            init = initial_class_solution(cls, vm)
+            if init is None:
+                points.append({"deadline_s": d_s, "vm": vm.name,
+                               "feasible": False})
+                continue
+            lo = max(1, init.nu - 8)
+            ts = amva_frontier(cls, vm, lo, init.nu + 8)
+            feas = np.where(ts <= cls.deadline_ms)[0]
+            nu_star = lo + int(feas[0]) if len(feas) else init.nu
+            sol = optimize_class(cls, vm, nu_star, ev, max_nu=400)
+            points.append({"deadline_s": d_s, "vm": vm.name,
+                           "feasible": sol.feasible, "nu": sol.nu,
+                           "cost_per_h": sol.cost_per_h,
+                           "reserved": sol.reserved, "spot": sol.spot,
+                           "T_s": sol.predicted_ms / 1000.0})
+    return points
+
+
+def _crossover(points) -> Optional[float]:
+    """Largest deadline at which CINECA is strictly cheaper (while both
+    feasible) — the Fig 7 region."""
+    by_d = {}
+    for p in points:
+        by_d.setdefault(p["deadline_s"], {})[p["vm"]] = p
+    best = None
+    for d, vms in sorted(by_d.items()):
+        m4, cin = vms.get("m4.xlarge"), vms.get("CINECA")
+        cin_ok = cin and cin.get("feasible")
+        m4_ok = m4 and m4.get("feasible")
+        if cin_ok and (not m4_ok or cin["cost_per_h"] < m4["cost_per_h"]):
+            best = d if best is None else max(best, d)
+    return best
+
+
+def run(quick: bool = False):
+    # quick mode reuses the committed full-grid sweep when available (the
+    # full grids take ~1 h of QN-in-the-loop optimization on one CPU core)
+    if quick:
+        import json
+        import os
+        cached = "results/cost_deadline.json"
+        if os.path.exists(cached):
+            out = json.loads(open(cached).read())
+            for fig, pts in out.items():
+                cross = _crossover(pts)
+                q = pts[0].get("vm") and {"fig5": ("Q1", 10),
+                                          "fig6": ("Q3", 10),
+                                          "fig7": ("Q1", 20)}[fig]
+                emit(f"{fig}_cost_deadline", 0.0,
+                     f"query={q[0]};users={q[1]};points={len(pts)};"
+                     f"cached=True;crossover_deadline_s={cross}")
+            return out
+
+    grids = {
+        "fig5": ("Q1", 10, [300, 240, 200, 160, 130, 110]),
+        "fig6": ("Q3", 10, [420, 330, 270, 220, 180, 150]),
+        # fig7 extends below m4's response-time floor (straggler-tail max of
+        # 500 map samples ~ 60 s) where only the faster CINECA cores remain
+        # feasible — the paper's crossover region
+        "fig7": ("Q1", 20, [300, 240, 200, 160, 130, 110, 95, 85, 75, 68,
+                            62, 56, 50]),
+    }
+    if quick:
+        grids = {k: (q, u, ds[::2]) for k, (q, u, ds) in grids.items()}
+    out = {}
+    for fig, (q, u, ds) in grids.items():
+        with timer() as t:
+            pts = sweep(q, u, ds, quick=quick)
+        out[fig] = pts
+        # monotonicity: cost non-increasing as deadline loosens (per VM)
+        mono = True
+        for vm in ("m4.xlarge", "CINECA"):
+            cs = [p["cost_per_h"] for p in sorted(
+                (x for x in pts if x["vm"] == vm and x.get("feasible")),
+                key=lambda x: x["deadline_s"])]
+            mono &= all(cs[i] >= cs[i + 1] - 1e-9 for i in range(len(cs) - 1))
+        cross = _crossover(pts)
+        emit(f"{fig}_cost_deadline", t.s / max(len(pts), 1) * 1e6,
+             f"query={q};users={u};points={len(pts)};mono_cost={mono};"
+             f"crossover_deadline_s={cross}")
+    save_json("cost_deadline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

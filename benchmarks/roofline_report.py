@@ -1,0 +1,36 @@
+"""§Roofline deliverable: three roofline terms per compiled cell, dominant
+bottleneck, model-FLOPs ratio — read from the dry-run record."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timer
+from repro.launch.roofline import analyze_file, format_table
+
+DRYRUN = "results/dryrun.json"
+
+
+def run(quick: bool = False):
+    if not os.path.exists(DRYRUN):
+        emit("roofline_report", 0.0, "SKIPPED:no dryrun record")
+        return None
+    with timer() as t:
+        rows = analyze_file(DRYRUN)
+    print(format_table(rows))
+    save_json("roofline", [r.as_dict() for r in rows])
+    single = [r for r in rows if r.mesh == "16x16"]
+    fracs = np.array([r.roofline_fraction for r in single])
+    bounds = {}
+    for r in single:
+        bounds[r.bottleneck] = bounds.get(r.bottleneck, 0) + 1
+    emit("roofline_report", t.s / max(len(rows), 1) * 1e6,
+         f"cells={len(rows)};median_frac={np.median(fracs):.2f};"
+         f"bottlenecks={bounds}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

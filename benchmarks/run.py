@@ -1,0 +1,62 @@
+"""Benchmark harness — one entry per paper table/figure + the TPU-framework
+beyond-paper tables.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run           # quick defaults
+    PYTHONPATH=src python -m benchmarks.run --full    # full grids
+
+Heavy sweeps (cost_deadline full grid) reuse cached results/*.json when
+present; regenerate with the module mains.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        cost_deadline,
+        hc_convergence,
+        kernel_microbench,
+        roofline_report,
+        serving_qn_validation,
+        table3_qn_validation,
+        tpu_capacity_plan,
+    )
+    benches = {
+        "table3": lambda: table3_qn_validation.run(quick=quick),
+        "cost_deadline": lambda: cost_deadline.run(quick=quick),
+        "hc_convergence": lambda: hc_convergence.run(quick=quick),
+        "tpu_capacity_plan": lambda: tpu_capacity_plan.run(quick=quick),
+        "roofline_report": lambda: roofline_report.run(quick=quick),
+        "kernel_microbench": lambda: kernel_microbench.run(quick=quick),
+        "serving_qn_validation": lambda: serving_qn_validation.run(
+            quick=quick),
+    }
+    if args.only:
+        names = args.only.split(",")
+        benches = {k: v for k, v in benches.items() if k in names}
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches.items():
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, e))
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 3 — QN model validation.
+
+For each of the 12 published scenarios: measure T on the detailed
+trace-replay cluster simulator (the 'real system' stand-in), extract the
+job profile + replayer lists from profiling runs (paper §4.1 methodology),
+predict tau with the closed fork-join QN, report theta = (tau - T)/T.
+
+Pass criterion (paper's own band): mean |theta| <~ 12%, max <~ 31%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timer
+from repro.core import qn_sim
+from repro.core.cluster_sim import replayer_lists, simulate_cluster
+from repro.core.workloads import TABLE3, THINK_MS, calibrated_specs
+
+
+def run(quick: bool = False):
+    specs = calibrated_specs()
+    rows = []
+    with timer() as t:
+        for i, s in enumerate(TABLE3):
+            sp = specs[i]
+            T, _ = simulate_cluster(
+                sp, slots=s.containers, h_users=s.users, think_ms=THINK_MS,
+                max_jobs=20 if quick else 40, warmup_jobs=5, seed=123)
+            ms, rs = replayer_lists(sp, runs=20, slots=s.containers, seed=55)
+            tau = qn_sim.response_time(
+                n_map=s.n_map, n_reduce=s.n_reduce, m_avg=sp.map_ms,
+                r_avg=sp.reduce_ms, think_ms=THINK_MS, h_users=s.users,
+                slots=s.containers, min_jobs=20 if quick else 40,
+                warmup_jobs=8, seed=3, replications=1 if quick else 2,
+                m_samples=ms, r_samples=rs)
+            theta = (tau - T) / T * 100.0
+            rows.append({
+                "query": s.query, "users": s.users, "cores": s.containers,
+                "dataset_gb": s.dataset_gb, "n_map": s.n_map,
+                "n_reduce": s.n_reduce, "T_ms": T, "tau_ms": tau,
+                "theta_pct": theta,
+            })
+    a = np.abs([r["theta_pct"] for r in rows])
+    summary = {"rows": rows, "mean_abs_theta_pct": float(a.mean()),
+               "max_abs_theta_pct": float(a.max()),
+               "paper_mean_pct": 12.27, "paper_max_pct": 30.59}
+    save_json("table3", summary)
+    per_row_us = t.s / len(rows) * 1e6
+    emit("table3_qn_validation", per_row_us,
+         f"mean|theta|={a.mean():.2f}%;max={a.max():.2f}%;"
+         f"paper=12.27%/30.59%;rows={len(rows)}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Beyond-paper table: D-SPACE4Cloud planning TPU fleets for the assigned
+architectures, from the dry-run roofline profiles (the paper's technique
+as this framework's first-class feature)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit, save_json, timer
+from repro.core.capacity import (
+    ServingClass,
+    TPUCapacityPlanner,
+    TrainClass,
+    load_dryrun,
+)
+
+DRYRUN = "results/dryrun.json"
+
+
+def run(quick: bool = False):
+    if not os.path.exists(DRYRUN):
+        emit("tpu_capacity_plan", 0.0, "SKIPPED:no dryrun record")
+        return None
+    planner = TPUCapacityPlanner(load_dryrun(DRYRUN))
+    serve_classes = [
+        ServingClass(name="chat-granite", arch="granite-3-2b",
+                     prompt_len=4096, gen_len=256, h_sessions=64,
+                     think_ms=10_000, deadline_ms=20_000),
+        ServingClass(name="chat-qwen2moe", arch="qwen2-moe-a2.7b",
+                     prompt_len=4096, gen_len=256, h_sessions=64,
+                     think_ms=10_000, deadline_ms=20_000),
+        ServingClass(name="long-gemma3", arch="gemma3-27b",
+                     prompt_len=16384, gen_len=512, h_sessions=16,
+                     think_ms=30_000, deadline_ms=90_000),
+    ]
+    train_classes = [
+        TrainClass(name="pretrain-gemma3", arch="gemma3-27b",
+                   steps=100_000, deadline_h=14 * 24),
+        TrainClass(name="pretrain-nemotron", arch="nemotron-4-340b",
+                   steps=50_000, deadline_h=30 * 24),
+        TrainClass(name="pretrain-mamba2", arch="mamba2-780m",
+                   steps=200_000, deadline_h=7 * 24),
+    ]
+    with timer() as t:
+        serve = planner.plan_serving(serve_classes, use_qn=not quick)
+        train = planner.plan_training(train_classes)
+    rows = {}
+    for k, v in {**serve, **train}.items():
+        rows[k] = v.as_dict()
+    save_json("tpu_capacity_plan", rows)
+    total = sum(v.cost_per_h for v in {**serve, **train}.values())
+    emit("tpu_capacity_plan", t.s / max(len(rows), 1) * 1e6,
+         f"classes={len(rows)};fleet_cost_per_h=${total:.0f};"
+         f"all_feasible={all(v.feasible for v in {**serve, **train}.values())}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""The paper's technique as this framework's first-class feature: plan a
+cost-optimal TPU fleet for serving + training workloads over the assigned
+architectures, from the multi-pod dry-run's roofline profiles.
+
+Requires results/dryrun.json (python -m repro.launch.dryrun).
+
+    PYTHONPATH=src python examples/capacity_planning.py
+"""
+import os
+
+from repro.core.capacity import (
+    ServingClass,
+    TPUCapacityPlanner,
+    TrainClass,
+    load_dryrun,
+)
+
+if not os.path.exists("results/dryrun.json"):
+    raise SystemExit("run `PYTHONPATH=src python -m repro.launch.dryrun` first")
+
+planner = TPUCapacityPlanner(load_dryrun("results/dryrun.json"))
+
+print("=== serving fleet ===")
+serve = planner.plan_serving([
+    ServingClass(name="chat-granite", arch="granite-3-2b", prompt_len=4096,
+                 gen_len=256, h_sessions=64, think_ms=10_000,
+                 deadline_ms=20_000),
+    ServingClass(name="long-ctx-gemma3", arch="gemma3-27b", prompt_len=16384,
+                 gen_len=512, h_sessions=16, think_ms=30_000,
+                 deadline_ms=90_000),
+], use_qn=True)
+for name, sol in serve.items():
+    print(f"  {name:18s} -> {sol.nu} x {sol.vm_type} "
+          f"(reserved={sol.reserved}, preemptible={sol.spot}) "
+          f"${sol.cost_per_h:.0f}/h, T={sol.predicted_ms:.0f} ms")
+
+print("\n=== training fleet ===")
+train = planner.plan_training([
+    TrainClass(name="pretrain-gemma3", arch="gemma3-27b", steps=100_000,
+               deadline_h=14 * 24),
+    TrainClass(name="pretrain-nemotron", arch="nemotron-4-340b",
+               steps=50_000, deadline_h=30 * 24),
+])
+for name, sol in train.items():
+    print(f"  {name:18s} -> {sol.nu} x {sol.vm_type} "
+          f"(reserved={sol.reserved}, preemptible={sol.spot}) "
+          f"${sol.cost_per_h:.0f}/h, makespan={sol.predicted_ms/3.6e6:.0f} h")

@@ -1,0 +1,53 @@
+"""Quickstart: D-SPACE4Cloud end-to-end in ~a minute.
+
+Builds a two-class capacity-planning problem (two VM types with different
+granularity/speed/price), runs the full Figure-3 pipeline — analytic
+initial solution, then QN-simulation-verified hill climbing with optimal
+reserved/spot mixes — and prints the cost-optimal deployment.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import (
+    ApplicationClass,
+    JobProfile,
+    Problem,
+    VMType,
+)
+
+interactive = JobProfile(n_map=64, n_reduce=16, m_avg=4000, m_max=9000,
+                         r_avg=2000, r_max=4500)
+batchy = JobProfile(n_map=400, n_reduce=64, m_avg=8000, m_max=18000,
+                    r_avg=5000, r_max=11000)
+
+small_vm = VMType(name="m4.xlarge", cores=4, sigma=0.07, pi=0.22,
+                  containers_per_core=2)
+big_vm = VMType(name="c20.node", cores=20, sigma=0.35, pi=0.90, speed=1.35)
+
+problem = Problem(
+    classes=[
+        ApplicationClass(
+            name="bi-dashboards", h_users=8, think_ms=10_000,
+            deadline_ms=60_000, eta=0.3,
+            profiles={"m4.xlarge": interactive,
+                      "c20.node": interactive.scaled(1.35)}),
+        ApplicationClass(
+            name="nightly-etl", h_users=2, think_ms=30_000,
+            deadline_ms=600_000, eta=0.5,
+            profiles={"m4.xlarge": batchy,
+                      "c20.node": batchy.scaled(1.35)}),
+    ],
+    vm_types=[small_vm, big_vm],
+)
+
+tool = DSpace4Cloud(problem, min_jobs=20, replications=1)
+report = tool.run()
+
+print(f"\ntotal cost: {report.total_cost_per_h:.2f}/h "
+      f"({report.evals} QN evaluations, {report.wall_s:.1f}s)\n")
+for name, sol in report.solutions.items():
+    print(f"  {name:15s} -> {sol.nu:3d} x {sol.vm_type:10s} "
+          f"(reserved={sol.reserved}, spot={sol.spot})  "
+          f"T={sol.predicted_ms/1000:6.1f}s  {sol.cost_per_h:6.2f}/h")
+print("\nJSON report:")
+print(report.to_json())

@@ -1,0 +1,29 @@
+"""Batched serving example: random-weight reduced Gemma3-style model
+behind the batching engine; a burst of requests is submitted and latency /
+throughput are reported — the measurements the capacity planner's QN model
+predicts at fleet scale.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.distributed.sharding import init_params
+from repro.models import api
+from repro.serve.engine import BatchingEngine
+
+cfg = get_smoke_config("gemma3-27b")
+params = init_params(api.param_specs(cfg), jax.random.key(0))
+engine = BatchingEngine(cfg, params, max_batch=4, temperature=0.8)
+
+rng = np.random.default_rng(0)
+for i in range(10):
+    prompt_len = int(rng.integers(8, 24))
+    prompt = rng.integers(1, cfg.vocab_size, size=prompt_len).tolist()
+    engine.submit(prompt, gen_len=8)
+
+done = engine.run()
+for r in done[:3]:
+    print(f"req {r.rid}: {len(r.tokens)} prompt toks -> {r.output}")
+print("\nsummary:", BatchingEngine.summarize(done))

@@ -1,0 +1,10 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    cell_supported,
+    sub_quadratic,
+)

@@ -1,0 +1,332 @@
+"""DAG workloads — the paper's stated future work (§6: "characterization of
+complex workflows expressed as DAGs, e.g., Tez or Spark jobs").
+
+A job is a CHAIN of fork-join stages (the paper's QN generalizes directly:
+"the model in Figure 2 ... can be easily extended to consider also Tez or
+Spark applications, where a DAG node or Spark stage is associated to a
+corresponding multi-server queue").  Stage k forks into n_k tasks that share
+the FCR with every other stage/user (later stages keep the priority of the
+paper's class switch: deeper stages dispatch first, FIFO within a level).
+
+Three tiers mirror the map-reduce machinery:
+  * ``dag_demand``       — ARIA-style (A, B) aggregation over stages;
+  * ``dag_response_time``— JAX event simulator (K-stage generalization of
+                           ``qn_sim``; replay or exponential services);
+  * ``simulate_dag_cluster`` — detailed trace-replay ground truth.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mva import ps_response
+
+INF = jnp.float32(1e30)
+
+
+@dataclass(frozen=True)
+class Stage:
+    n_tasks: int
+    t_avg: float                  # mean task duration [ms]
+    t_max: float = 0.0            # max (for the analytic B term)
+    cv: float = 0.35              # detailed-sim lognormal CV
+
+    @property
+    def max_or_est(self) -> float:
+        return self.t_max if self.t_max > 0 else 2.5 * self.t_avg
+
+
+@dataclass(frozen=True)
+class DagJob:
+    name: str
+    stages: Tuple[Stage, ...]
+
+    @property
+    def total_work(self) -> float:
+        return sum(s.n_tasks * s.t_avg for s in self.stages)
+
+
+# --------------------------------------------------------------------------
+# Analytic tier
+# --------------------------------------------------------------------------
+
+def dag_demand(job: DagJob) -> Tuple[float, float]:
+    """ARIA-style (A, B): T_est(c) = A/c + B summed over the stage chain."""
+    a = sum((s.n_tasks - 0.5) * s.t_avg for s in job.stages)
+    b = 0.5 * sum(s.max_or_est for s in job.stages)
+    return a, b
+
+
+def dag_response_analytic(job: DagJob, slots: int, think: float,
+                          h_users: int) -> float:
+    a, b = dag_demand(job)
+    return ps_response(a / slots, b, think, h_users)
+
+
+# --------------------------------------------------------------------------
+# JAX event simulator — K-stage fork-join chain in one scan
+# --------------------------------------------------------------------------
+
+def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
+             n_stages: int, max_slots: int, n_events: int,
+             warmup_jobs: int, seed, samples=None):
+    """n_tasks: (K,) int32; t_avg: (K,) f32.  phase: 0=think, k=stage k.
+    ``samples`` (K, NS): optional per-stage empirical duration lists
+    (replayer mode — without it, exponential services over-predict
+    wave-dominated stages by ~50%, same effect as Table 3)."""
+    key = jax.random.key(seed)
+    H = h_users
+    k0, key = jax.random.split(key)
+
+    state = dict(
+        now=jnp.float32(0),
+        slot_end=jnp.full((max_slots,), INF),
+        slot_user=jnp.full((max_slots,), -1, jnp.int32),
+        think_end=jax.random.exponential(k0, (H,)) * think_ms,
+        phase=jnp.zeros((H,), jnp.int32),
+        pending=jnp.zeros((H,), jnp.int32),
+        inflight=jnp.zeros((H,), jnp.int32),
+        arrival=jnp.full((H,), INF),
+        job_start=jnp.zeros((H,)),
+        resp_sum=jnp.float32(0), resp_cnt=jnp.float32(0),
+        done_jobs=jnp.int32(0))
+    slot_enabled = jnp.arange(max_slots) < slots_cap
+
+    def step(s, i):
+        free_slot = jnp.any((s["slot_user"] < 0) & slot_enabled)
+        has_pending = jnp.any(s["pending"] > 0)
+        b_dispatch = free_slot & has_pending
+
+        # deeper stages first (paper's class-switch priority), FIFO inside
+        key_i = jax.random.fold_in(key, i)
+        depth_key = jnp.where(s["pending"] > 0,
+                              -s["phase"].astype(jnp.float32) * 1e9
+                              + 0.0, INF)
+        # two-level: pick max depth with pending, then min arrival
+        has_p = s["pending"] > 0
+        max_depth = jnp.max(jnp.where(has_p, s["phase"], -1))
+        cand = has_p & (s["phase"] == max_depth)
+        u = jnp.argmin(jnp.where(cand, s["arrival"], INF))
+        stage_idx = jnp.clip(s["phase"][u] - 1, 0, n_stages - 1)
+        if samples is not None:
+            idx = jax.random.randint(key_i, (), 0, samples.shape[1])
+            st = samples[stage_idx, idx]
+        else:
+            st = jax.random.exponential(key_i) * t_avg[stage_idx]
+        slot = jnp.argmax((s["slot_user"] < 0) & slot_enabled)
+        d_slot_end = s["slot_end"].at[slot].set(s["now"] + st)
+        d_slot_user = s["slot_user"].at[slot].set(u.astype(jnp.int32))
+        d_pending = s["pending"].at[u].add(-1)
+        d_inflight = s["inflight"].at[u].add(1)
+
+        t_slot = jnp.min(s["slot_end"])
+        t_think = jnp.min(s["think_end"])
+        b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
+        b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
+
+        cslot = jnp.argmin(s["slot_end"])
+        cu = s["slot_user"][cslot]
+        c_inflight = s["inflight"].at[cu].add(-1)
+        stage_done = (s["pending"][cu] == 0) & (c_inflight[cu] == 0)
+        last_stage = s["phase"][cu] >= n_stages
+        advance = stage_done & (~last_stage)
+        job_done = stage_done & last_stage
+        nxt = s["phase"][cu] + 1
+        c_phase = s["phase"].at[cu].set(
+            jnp.where(job_done, 0, jnp.where(advance, nxt, s["phase"][cu])))
+        c_pending = s["pending"].at[cu].set(
+            jnp.where(advance,
+                      n_tasks[jnp.clip(nxt - 1, 0, n_stages - 1)],
+                      s["pending"][cu]))
+        c_arrival = s["arrival"].at[cu].set(
+            jnp.where(advance, t_slot,
+                      jnp.where(job_done, INF, s["arrival"][cu])))
+        kq = jax.random.fold_in(key, i + n_events)
+        c_think = s["think_end"].at[cu].set(
+            jnp.where(job_done,
+                      t_slot + jax.random.exponential(kq) * think_ms,
+                      s["think_end"][cu]))
+        resp = t_slot - s["job_start"][cu]
+        counted = job_done & (s["done_jobs"] >= warmup_jobs)
+        c_resp_sum = s["resp_sum"] + jnp.where(counted, resp, 0.0)
+        c_resp_cnt = s["resp_cnt"] + jnp.where(counted, 1.0, 0.0)
+        c_done = s["done_jobs"] + jnp.where(job_done, 1, 0)
+        c_slot_end = s["slot_end"].at[cslot].set(INF)
+        c_slot_user = s["slot_user"].at[cslot].set(-1)
+
+        tu = jnp.argmin(s["think_end"])
+        t_phase = s["phase"].at[tu].set(1)
+        t_pending = s["pending"].at[tu].set(n_tasks[0])
+        t_arrival = s["arrival"].at[tu].set(t_think)
+        t_jobstart = s["job_start"].at[tu].set(t_think)
+        t_think_end = s["think_end"].at[tu].set(INF)
+
+        def sel(cur, d, c, t):
+            return jnp.where(b_dispatch, d,
+                             jnp.where(b_complete, c,
+                                       jnp.where(b_think, t, cur)))
+
+        new = dict(
+            now=sel(s["now"], s["now"], t_slot, t_think),
+            slot_end=sel(s["slot_end"], d_slot_end, c_slot_end,
+                         s["slot_end"]),
+            slot_user=sel(s["slot_user"], d_slot_user, c_slot_user,
+                          s["slot_user"]),
+            think_end=sel(s["think_end"], s["think_end"], c_think,
+                          t_think_end),
+            phase=sel(s["phase"], s["phase"], c_phase, t_phase),
+            pending=sel(s["pending"], d_pending, c_pending, t_pending),
+            inflight=sel(s["inflight"], d_inflight, c_inflight,
+                         s["inflight"]),
+            arrival=sel(s["arrival"], s["arrival"], c_arrival, t_arrival),
+            job_start=sel(s["job_start"], s["job_start"], s["job_start"],
+                          t_jobstart),
+            resp_sum=sel(s["resp_sum"], s["resp_sum"], c_resp_sum,
+                         s["resp_sum"]),
+            resp_cnt=sel(s["resp_cnt"], s["resp_cnt"], c_resp_cnt,
+                         s["resp_cnt"]),
+            done_jobs=sel(s["done_jobs"], s["done_jobs"], c_done,
+                          s["done_jobs"]),
+        )
+        return new, None
+
+    state, _ = jax.lax.scan(step, state, jnp.arange(n_events))
+    return (state["resp_sum"] / jnp.maximum(state["resp_cnt"], 1.0),
+            state["resp_cnt"])
+
+
+@partial(jax.jit, static_argnames=("h_users", "n_stages", "max_slots",
+                                   "n_events", "warmup_jobs"))
+def _dag_sim_jit(n_tasks, t_avg, think_ms, slots_cap, seed, *, h_users,
+                 n_stages, max_slots, n_events, warmup_jobs):
+    return _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users, n_stages,
+                    max_slots, n_events, warmup_jobs, seed)
+
+
+@partial(jax.jit, static_argnames=("h_users", "n_stages", "max_slots",
+                                   "n_events", "warmup_jobs"))
+def _dag_sim_replay_jit(n_tasks, t_avg, think_ms, slots_cap, seed, samples,
+                        *, h_users, n_stages, max_slots, n_events,
+                        warmup_jobs):
+    return _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users, n_stages,
+                    max_slots, n_events, warmup_jobs, seed, samples=samples)
+
+
+def dag_replayer_lists(job: DagJob, runs: int = 20, seed: int = 100,
+                       cap: int = 1024) -> np.ndarray:
+    """(K, cap) per-stage empirical duration samples (profiling runs)."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros((len(job.stages), cap), np.float32)
+    for k, s in enumerate(job.stages):
+        sigma = math.sqrt(math.log(1 + s.cv ** 2))
+        draws = rng.lognormal(math.log(s.t_avg), sigma,
+                              max(cap, runs * s.n_tasks))
+        out[k] = rng.choice(draws, cap, replace=False)
+    return out
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def dag_response_time(job: DagJob, slots: int, think_ms: float,
+                      h_users: int, min_jobs: int = 40,
+                      warmup_jobs: int = 8, seed: int = 0,
+                      replications: int = 2, samples=None) -> float:
+    per_job = 2 * sum(s.n_tasks for s in job.stages) + 4
+    n_events = _pow2(int(1.5 * per_job * (min_jobs + warmup_jobs)))
+    nt = jnp.asarray([s.n_tasks for s in job.stages], jnp.int32)
+    ta = jnp.asarray([s.t_avg for s in job.stages], jnp.float32)
+    outs = []
+    for r in range(replications):
+        common = dict(h_users=h_users, n_stages=len(job.stages),
+                      max_slots=_pow2(slots), n_events=n_events,
+                      warmup_jobs=warmup_jobs)
+        if samples is not None:
+            m, c = _dag_sim_replay_jit(
+                nt, ta, jnp.float32(think_ms), jnp.int32(slots),
+                seed + 1000 * r, jnp.asarray(samples, jnp.float32), **common)
+        else:
+            m, c = _dag_sim_jit(nt, ta, jnp.float32(think_ms),
+                                jnp.int32(slots), seed + 1000 * r, **common)
+        if float(c) > 0:
+            outs.append((float(m), float(c)))
+    if not outs:
+        return float("inf")
+    tot = sum(c for _, c in outs)
+    return sum(m * c for m, c in outs) / tot
+
+
+# --------------------------------------------------------------------------
+# Detailed ground truth
+# --------------------------------------------------------------------------
+
+def simulate_dag_cluster(job: DagJob, *, slots: int, h_users: int,
+                         think_ms: float, max_jobs: int = 40,
+                         warmup_jobs: int = 5, seed: int = 0) -> float:
+    rng = np.random.default_rng(seed)
+    K = len(job.stages)
+    free = slots
+    queues: List[List[Tuple[float, int, float]]] = [[] for _ in range(K)]
+    events: List[Tuple[float, int, int, int]] = []  # (t, kind, job, stage)
+    state = {}                                      # jid -> [stage, remaining]
+    submit_t = {}
+    responses: List[float] = []
+    next_jid = [0]
+
+    def draw(stage: Stage) -> float:
+        sigma = math.sqrt(math.log(1 + stage.cv ** 2))
+        return float(rng.lognormal(math.log(stage.t_avg), sigma))
+
+    def fork(jid: int, k: int, now: float):
+        state[jid] = [k, job.stages[k].n_tasks]
+        for _ in range(job.stages[k].n_tasks):
+            queues[k].append((now, jid, draw(job.stages[k])))
+
+    def dispatch(now: float):
+        nonlocal free
+        while free > 0:
+            for k in reversed(range(K)):            # deeper stages first
+                if queues[k]:
+                    arr, jid, dur = queues[k].pop(0)
+                    heapq.heappush(events, (now + dur, 1, jid, k))
+                    free -= 1
+                    break
+            else:
+                return
+
+    for u in range(h_users):
+        heapq.heappush(events, (rng.exponential(think_ms), 0, u, 0))
+
+    done = 0
+    while events and done < max_jobs + warmup_jobs:
+        t, kind, a, k = heapq.heappop(events)
+        if kind == 0:                               # submit
+            jid = next_jid[0]
+            next_jid[0] += 1
+            submit_t[jid] = t
+            fork(jid, 0, t)
+            dispatch(t)
+            continue
+        free += 1
+        jid = a
+        state[jid][1] -= 1
+        if state[jid][1] == 0:
+            if state[jid][0] + 1 < K:
+                fork(jid, state[jid][0] + 1, t)
+            else:
+                done += 1
+                if done > warmup_jobs:
+                    responses.append(t - submit_t[jid])
+                heapq.heappush(
+                    events, (t + rng.exponential(think_ms), 0, 0, 0))
+        dispatch(t)
+
+    return float(np.mean(responses)) if responses else float("inf")

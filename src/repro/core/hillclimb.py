@@ -1,0 +1,105 @@
+"""Parallel Local Search Optimizer — Algorithm 1, verbatim structure.
+
+Per class (independently, in parallel): evaluate the initial solution with
+the accurate evaluator (QN simulation by default); while infeasible,
+IncrementCluster; otherwise DecrementCluster while feasible and step back
+once.  Every move re-optimizes the reserved/spot mix (pricing.optimal_mix).
+Cost is linear in nu with prices fixed, so HC reaches the class optimum
+(paper §3.2) up to evaluator noise.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.pricing import optimal_mix
+from repro.core.problem import (
+    ApplicationClass,
+    ClassSolution,
+    Problem,
+    VMType,
+)
+
+# evaluator: (cls, vm, nu) -> predicted response time [ms]
+Evaluator = Callable[[ApplicationClass, VMType, int], float]
+
+
+@dataclass
+class HCTrace:
+    cls: str
+    moves: List[Tuple[int, float, bool]] = field(default_factory=list)
+    evals: int = 0
+    wall_s: float = 0.0
+
+
+def _solution(cls: ApplicationClass, vm: VMType, nu: int,
+              t: float) -> ClassSolution:
+    r, s, cost = optimal_mix(nu, cls.eta, vm)
+    return ClassSolution(vm_type=vm.name, nu=nu, reserved=r, spot=s,
+                         cost_per_h=cost, predicted_ms=t,
+                         feasible=t <= cls.deadline_ms)
+
+
+def optimize_class(cls: ApplicationClass, vm: VMType, nu0: int,
+                   evaluate: Evaluator, max_nu: int = 8192,
+                   stall_patience: int = 6,
+                   trace: Optional[HCTrace] = None) -> ClassSolution:
+    """Algorithm 1 body for one class S_i.
+
+    ``stall_patience`` guards the pursuit-of-feasibility loop: when the
+    response time has floored (e.g. straggler-tail lower bound > deadline,
+    where no cluster size can help), ``stall_patience`` consecutive
+    increments without >0.5% improvement abort with an infeasible verdict
+    (the paper's Algorithm 1 leaves divergence handling unspecified)."""
+    t_start = time.time()
+    tr = trace if trace is not None else HCTrace(cls=cls.name)
+    nu = max(1, nu0)
+    t = evaluate(cls, vm, nu)
+    tr.evals += 1
+    tr.moves.append((nu, t, t <= cls.deadline_ms))
+
+    if t > cls.deadline_ms:                        # pursuit of feasibility
+        stall = 0
+        while t > cls.deadline_ms and nu < max_nu and stall < stall_patience:
+            nu += 1                                # IncrementCluster
+            t_new = evaluate(cls, vm, nu)
+            stall = stall + 1 if t_new > t * 0.995 else 0
+            t = t_new
+            tr.evals += 1
+            tr.moves.append((nu, t, t <= cls.deadline_ms))
+    else:                                          # cost optimization
+        while nu > 1:
+            t_next = evaluate(cls, vm, nu - 1)     # DecrementCluster probe
+            tr.evals += 1
+            tr.moves.append((nu - 1, t_next, t_next <= cls.deadline_ms))
+            if t_next <= cls.deadline_ms:
+                nu -= 1
+                t = t_next
+            else:
+                break                              # IncrementCluster (back)
+    tr.wall_s = time.time() - t_start
+    return _solution(cls, vm, nu, t)
+
+
+def hill_climb(
+    problem: Problem, initial: Dict[str, ClassSolution],
+    evaluate: Evaluator, *, parallel: bool = True, max_nu: int = 8192,
+) -> Tuple[Dict[str, ClassSolution], Dict[str, HCTrace]]:
+    """Algorithm 1: parallel-for over classes."""
+    traces = {c.name: HCTrace(cls=c.name) for c in problem.classes}
+
+    def run_one(cls: ApplicationClass) -> Tuple[str, ClassSolution]:
+        init = initial[cls.name]
+        vm = problem.vm_by_name(init.vm_type)
+        sol = optimize_class(cls, vm, init.nu, evaluate, max_nu=max_nu,
+                             trace=traces[cls.name])
+        return cls.name, sol
+
+    if parallel and len(problem.classes) > 1:
+        with ThreadPoolExecutor(max_workers=min(8, len(problem.classes))) as ex:
+            results = dict(ex.map(run_one, problem.classes))
+    else:
+        results = dict(map(run_one, problem.classes))
+    return results, traces

@@ -1,0 +1,56 @@
+"""Initial Solution Builder (paper §3.2, Figure 3, left box).
+
+The paper solves a MINLP whose inner problem is convex (time expression T
+convex in nu) via KKT conditions [29].  Here the same structure is made
+explicit: with prices fixed per VM type, cost is strictly increasing in nu
+and T strictly decreasing, so the KKT/complementary-slackness point is
+"deadline binds": nu* = min { nu : T(nu) <= D }.  We find it on the convex
+analytic MVA model with bisection (exact for monotone T — this *is* the
+stationary point of the relaxed convex program, then ceil-restored to
+integrality), independently per class and per VM type, then pick the
+cheapest feasible VM type (the outer x_ij choice).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from repro.core.mva import job_response, min_slots_for_deadline
+from repro.core.pricing import optimal_mix
+from repro.core.problem import ApplicationClass, ClassSolution, Problem, VMType
+
+
+def initial_class_solution(cls: ApplicationClass, vm: VMType,
+                           max_vms: int = 4096) -> Optional[ClassSolution]:
+    prof = cls.profile_for(vm)
+    slots = min_slots_for_deadline(prof, cls.think_ms, cls.h_users,
+                                   cls.deadline_ms,
+                                   max_slots=max_vms * vm.slots)
+    if slots < 0:
+        return None
+    nu = max(1, math.ceil(slots / vm.slots))
+    r, s, cost = optimal_mix(nu, cls.eta, vm)
+    t = job_response(prof, nu * vm.slots, cls.think_ms, cls.h_users)
+    return ClassSolution(vm_type=vm.name, nu=nu, reserved=r, spot=s,
+                         cost_per_h=cost, predicted_ms=t,
+                         feasible=t <= cls.deadline_ms)
+
+
+def initial_solution(problem: Problem,
+                     max_vms: int = 4096) -> Dict[str, ClassSolution]:
+    """Per class: cheapest feasible (vm type, nu) under the analytic model."""
+    out: Dict[str, ClassSolution] = {}
+    for cls in problem.classes:
+        best: Optional[ClassSolution] = None
+        for vm in problem.vm_types:
+            sol = initial_class_solution(cls, vm, max_vms=max_vms)
+            if sol is None:
+                continue
+            if best is None or sol.cost_per_h < best.cost_per_h:
+                best = sol
+        if best is None:
+            raise ValueError(
+                f"class {cls.name}: no feasible configuration below "
+                f"{max_vms} VMs of any type")
+        out[cls.name] = best
+    return out

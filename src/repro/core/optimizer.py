@@ -1,0 +1,103 @@
+"""D-SPACE4Cloud facade — Figure 3 architecture end-to-end.
+
+JSON problem description in -> Initial Solution Builder (analytic/KKT) ->
+Parallel Local Search Optimizer (hill climbing on the QN simulator) ->
+JSON solution out.  ``fast_mode`` adds the beyond-paper batched-AMVA
+frontier pass: the AMVA frontier proposes nu*, the QN simulator verifies
+and HC only polishes locally (orders of magnitude fewer simulator calls —
+benchmarked in benchmarks/hc_convergence.py).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.evaluators import (
+    amva_frontier,
+    make_qn_evaluator,
+    mva_evaluator,
+)
+from repro.core.hillclimb import HCTrace, hill_climb, optimize_class
+from repro.core.milp import initial_solution
+from repro.core.pricing import optimal_mix
+from repro.core.problem import ClassSolution, Problem, solution_cost
+
+
+@dataclass
+class RunReport:
+    solutions: Dict[str, ClassSolution]
+    total_cost_per_h: float
+    wall_s: float
+    evals: int
+    traces: Dict[str, HCTrace] = field(default_factory=dict)
+    initial: Optional[Dict[str, ClassSolution]] = None
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "total_cost_per_h": self.total_cost_per_h,
+            "wall_s": self.wall_s,
+            "qn_evaluations": self.evals,
+            "classes": {k: v.as_dict() for k, v in self.solutions.items()},
+            "initial": ({k: v.as_dict() for k, v in self.initial.items()}
+                        if self.initial else None),
+        }, indent=1)
+
+
+class DSpace4Cloud:
+    """The tool: optimization scenario of Figure 3."""
+
+    def __init__(self, problem: Problem, *, min_jobs: int = 40,
+                 replications: int = 2, seed: int = 0, samples=None):
+        self.problem = problem
+        self._qn_cache: dict = {}
+        self.evaluate = make_qn_evaluator(
+            min_jobs=min_jobs, replications=replications, seed=seed,
+            cache=self._qn_cache, samples=samples)
+
+    # ------------------------------------------------------------- classic
+    def run(self, parallel: bool = True) -> RunReport:
+        """Paper-faithful: MINLP-tier initial solution + QN-driven HC."""
+        t0 = time.time()
+        init = initial_solution(self.problem)
+        sols, traces = hill_climb(self.problem, init, self.evaluate,
+                                  parallel=parallel)
+        evals = sum(t.evals for t in traces.values())
+        return RunReport(solutions=sols,
+                         total_cost_per_h=solution_cost(sols),
+                         wall_s=time.time() - t0, evals=evals,
+                         traces=traces, initial=init)
+
+    # ---------------------------------------------------------- fast mode
+    def run_fast(self, frontier_span: int = 64) -> RunReport:
+        """Beyond-paper: AMVA frontier proposes, QN verifies, HC polishes."""
+        t0 = time.time()
+        init = initial_solution(self.problem)
+        sols: Dict[str, ClassSolution] = {}
+        traces: Dict[str, HCTrace] = {}
+        for cls in self.problem.classes:
+            vm = self.problem.vm_by_name(init[cls.name].vm_type)
+            nu0 = init[cls.name].nu
+            lo = max(1, nu0 - frontier_span // 2)
+            hi = nu0 + frontier_span
+            ts = amva_frontier(cls, vm, lo, hi)
+            feas = np.where(ts <= cls.deadline_ms)[0]
+            nu_star = (lo + int(feas[0])) if len(feas) else hi
+            tr = HCTrace(cls=cls.name)
+            sols[cls.name] = optimize_class(cls, vm, nu_star, self.evaluate,
+                                            trace=tr)
+            traces[cls.name] = tr
+        evals = sum(t.evals for t in traces.values())
+        return RunReport(solutions=sols,
+                         total_cost_per_h=solution_cost(sols),
+                         wall_s=time.time() - t0, evals=evals,
+                         traces=traces, initial=init)
+
+    # ------------------------------------------------------------ file API
+    @staticmethod
+    def from_json_file(path: str, **kw) -> "DSpace4Cloud":
+        with open(path) as f:
+            return DSpace4Cloud(Problem.from_json(f.read()), **kw)

@@ -1,0 +1,56 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD).
+
+Plugs into ``make_train_step(grad_transform=...)``: before the optimizer
+(and before the implicit data-parallel all-reduce in the sharded program),
+gradients are quantized to int8 with per-row absmax scales; the
+quantization residual is fed back into the next step (Karimireddy et al.,
+error feedback keeps SGD convergent under biased compression).
+
+Wire-format note (honest): XLA has no int8 all-reduce, so the program
+reduces the *dequantized* values — the numerics are exactly EF-int8 while
+the on-wire saving (4x) is what a custom ICI collective would give; the
+roofline model in EXPERIMENTS.md §Perf accounts for it as bytes/4 when the
+flag is on.  Convergence parity is validated in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import dequantize_rowwise, quantize_rowwise
+
+Params = Any
+
+
+def init_error_state(params: Params) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_int8_transform(grads: Params, state: Dict[str, Any],
+                      key: str = "ef_err") -> Tuple[Params, Dict[str, Any]]:
+    """grad_transform hook: returns (compressed grads, updated state)."""
+    err = state[key]
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        codes, scale = quantize_rowwise(g)
+        g_hat = dequantize_rowwise(codes, scale)
+        return g_hat, g - g_hat
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    new_state = dict(state)
+    new_state[key] = new_e
+    return new_g, new_state
+
+
+def compression_ratio() -> float:
+    """Nominal wire compression vs f32 gradients (int8 codes + f32 scales
+    per row; scales are negligible for realistic row lengths)."""
+    return 4.0

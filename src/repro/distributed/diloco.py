@@ -1,0 +1,103 @@
+"""DiLoCo-style cross-pod training (async-ish distributed optimization).
+
+The multi-pod mesh's ``pod`` axis has much lower bandwidth than intra-pod
+ICI (DCN links).  Instead of all-reducing gradients across pods every
+step, each pod runs K local AdamW steps on its own shard of the stream and
+pods synchronize every K steps with an OUTER Nesterov-momentum update on
+the average parameter delta (Douillard et al., DiLoCo):
+
+    delta   = anchor - mean_p(params_p)
+    m'      = beta * m + delta
+    anchor' = anchor - lr_outer * (beta * m' + delta)    (Nesterov)
+    params_p <- anchor'   (re-sync)
+
+Communication across pods drops by K x.  Here pods are modeled explicitly
+as a stacked leading axis (vmap over pods) so the algorithm runs and is
+tested on any device count; on a real multi-pod mesh the same functions
+apply per-pod with ``jax.lax.pmean`` over the ``pod`` axis (the delta
+averaging is the only cross-pod collective).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class DiLoCoConfig:
+    n_pods: int = 2
+    inner_steps: int = 8
+    outer_lr: float = 0.7
+    outer_beta: float = 0.9
+
+
+def replicate_for_pods(params: Params, n_pods: int) -> Params:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (n_pods,) + p.shape).copy(), params)
+
+
+def init_outer_state(params: Params) -> Dict[str, Params]:
+    return {
+        "anchor": params,
+        "momentum": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def outer_update(cfg: DiLoCoConfig, outer: Dict[str, Params],
+                 pod_params: Params) -> Tuple[Dict[str, Params], Params]:
+    """pod_params: tree with leading (n_pods,) axis.  Returns (new outer
+    state, re-synced pod params)."""
+    def one(anchor, m, pp):
+        delta = anchor.astype(jnp.float32) - jnp.mean(
+            pp.astype(jnp.float32), axis=0)
+        m_new = cfg.outer_beta * m + delta
+        step = cfg.outer_beta * m_new + delta          # Nesterov
+        new_anchor = (anchor.astype(jnp.float32)
+                      - cfg.outer_lr * step).astype(anchor.dtype)
+        resynced = jnp.broadcast_to(new_anchor, pp.shape).astype(pp.dtype)
+        return new_anchor, m_new, resynced
+
+    flat_a, tdef = jax.tree_util.tree_flatten(outer["anchor"])
+    flat_m = tdef.flatten_up_to(outer["momentum"])
+    flat_p = tdef.flatten_up_to(pod_params)
+    outs = [one(a, m, p) for a, m, p in zip(flat_a, flat_m, flat_p)]
+    new_outer = {
+        "anchor": jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs]),
+        "momentum": jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]),
+    }
+    resynced = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    return new_outer, resynced
+
+
+def make_diloco_round(cfg: DiLoCoConfig, train_step: Callable,
+                      batch_fn: Callable) -> Callable:
+    """Returns ``round(pod_states, outer, round_idx) -> (pod_states, outer,
+    metrics)`` running K inner steps per pod (vmapped) + one outer update.
+
+    ``batch_fn(round_idx, inner_idx, pod_idx)`` must return the per-pod
+    batch (pods consume disjoint shards)."""
+
+    def one_pod_inner(state, batches):
+        def body(s, b):
+            s, m = train_step(s, b)
+            return s, m["loss"]
+        state, losses = jax.lax.scan(body, state, batches)
+        return state, losses.mean()
+
+    def round_fn(pod_states, outer, round_idx):
+        batches = batch_fn(round_idx)   # tree with (n_pods, K, ...) leaves
+        pod_states, losses = jax.vmap(one_pod_inner)(pod_states, batches)
+        outer, resynced = outer_update(
+            cfg, outer, pod_states["params"])
+        pod_states = dict(pod_states)
+        pod_states["params"] = resynced
+        return pod_states, outer, {"loss": losses.mean()}
+
+    return round_fn

@@ -1,0 +1,96 @@
+"""GPipe-style pipeline parallelism (PP) in pure pjit-able JAX.
+
+Formulation: stage parameters are STACKED along a leading ``stages`` axis
+(shardable over a mesh axis — e.g. the multi-pod ``pod`` axis, which makes
+cross-pod traffic *boundary activations only*, an alternative to DiLoCo for
+bandwidth-poor inter-pod links).  The classic skew-schedule runs
+``M + S − 1`` ticks; at every tick all stages execute in parallel
+(``vmap`` over the stage axis → per-device compute under SPMD) and the
+activation buffer rotates one stage forward (``jnp.roll`` along the sharded
+stage axis → a collective-permute under SPMD).
+
+    tick t:  buf[s] <- stage_s(buf[s-1]),   buf[0] <- microbatch_t
+
+Bubble fraction = (S−1)/(M+S−1), the GPipe overhead — reported by
+``pipeline_stats``.  Numerical equivalence with sequential execution is
+asserted in tests/test_pipeline.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    n_stages: int
+    n_microbatches: int
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_microbatches + self.n_stages - 1
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (self.n_stages - 1) / self.n_ticks
+
+
+def pipeline_forward(
+    stage_fn: Callable[[Params, jax.Array], jax.Array],
+    stacked_params: Params,
+    microbatches: jax.Array,
+    cfg: PipelineConfig,
+) -> jax.Array:
+    """Run microbatches through the stage pipeline.
+
+    stage_fn: (stage_params, x) -> y for ONE stage.
+    stacked_params: pytree with leading (n_stages,) axis.
+    microbatches: (M, mb, ...) inputs.
+    Returns (M, mb, ...) outputs of the last stage, in order.
+    """
+    S, M = cfg.n_stages, cfg.n_microbatches
+    assert microbatches.shape[0] == M
+    mb_shape = microbatches.shape[1:]
+
+    buf0 = jnp.zeros((S,) + mb_shape, microbatches.dtype)
+    # pad the input stream with S-1 dummy microbatches to flush the pipe
+    pad = jnp.zeros((S - 1,) + mb_shape, microbatches.dtype)
+    stream = jnp.concatenate([microbatches, pad], axis=0)
+
+    vstage = jax.vmap(stage_fn)                    # all stages in parallel
+
+    def tick(buf, x_t):
+        # inject the next microbatch at stage 0; shift everything else
+        shifted = jnp.roll(buf, 1, axis=0)         # ppermute under SPMD
+        inflow = jnp.concatenate([x_t[None], shifted[1:]], axis=0)
+        out = vstage(stacked_params, inflow)
+        return out, out[S - 1]
+
+    _, outs = lax.scan(tick, buf0, stream)         # (M+S-1, mb, ...)
+    # microbatch m exits the last stage at tick m + S - 1
+    return outs[S - 1:]
+
+
+def split_microbatches(x: jax.Array, n_microbatches: int) -> jax.Array:
+    B = x.shape[0]
+    assert B % n_microbatches == 0
+    return x.reshape((n_microbatches, B // n_microbatches) + x.shape[1:])
+
+
+def merge_microbatches(x: jax.Array) -> jax.Array:
+    return x.reshape((-1,) + x.shape[2:])
+
+
+def stack_stage_params(per_stage: Tuple[Params, ...]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_stage)
+
+
+def pipeline_stats(cfg: PipelineConfig) -> dict:
+    return {"ticks": cfg.n_ticks, "bubble_fraction": cfg.bubble_fraction,
+            "efficiency": 1.0 - cfg.bubble_fraction}

@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (MaxText-style) + abstract param specs.
+
+Every parameter / activation dimension carries a *logical* axis name; a rule
+table maps logical names to mesh axes.  The same model code therefore runs on
+a 1-device CPU mesh, the single-pod 16x16 mesh and the multi-pod 2x16x16 mesh
+just by swapping rules.
+
+``ParamSpec`` trees describe parameters abstractly (shape/dtype/axes/init) so
+the multi-pod dry-run can build sharded ``ShapeDtypeStruct`` inputs without
+ever materializing 340B parameters on the CPU host.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Logical axis rules
+# --------------------------------------------------------------------------
+
+# MeshAxes entry: tuple of mesh axis names (joint sharding), or None.
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def make_rules(
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    batch_axes: Tuple[str, ...] = ("data",),
+    model_axes: Tuple[str, ...] = ("model",),
+    fsdp: bool = True,
+    kv_layout: str = "heads",
+    sp: bool = False,
+) -> Rules:
+    """Build the logical->mesh rule table.
+
+    - ``batch_axes``: activation batch dim (("pod","data") on the multi-pod
+      mesh — the pod axis is pure DP/DiLoCo).
+    - ``fsdp``: shard the parameter ``embed`` dim over the data axis
+      (ZeRO-3-style); optimizer states follow parameters.
+    - ``kv_layout``: decode KV-cache layout —
+        * "heads":     kv heads over the model axis (needs divisibility),
+        * "seq_model": cache sequence over the model axis (flash-decoding
+                       style partial-softmax combine; used when the arch's
+                       kv-head count does not divide the model axis),
+        * "seq_data":  cache sequence over the data axis + heads over model
+                       (long_500k: batch=1 leaves the data axis free).
+    """
+    if kv_layout == "heads":
+        kv_seq, kv_heads = None, tuple(model_axes)
+    elif kv_layout == "seq_model":
+        kv_seq, kv_heads = tuple(model_axes), None
+    elif kv_layout == "seq_data":
+        kv_seq, kv_heads = tuple(data_axes), tuple(model_axes)
+    else:
+        raise ValueError(f"unknown kv_layout {kv_layout}")
+    rules: Rules = {
+        # parameter dims
+        "embed": tuple(data_axes) if fsdp else None,
+        "heads_merged": tuple(model_axes),
+        "mlp": tuple(model_axes),
+        "vocab": tuple(model_axes),
+        "experts": tuple(model_axes),
+        "expert_mlp": None,
+        "expert_data": tuple(data_axes),
+        "mamba_inner": tuple(model_axes),
+        "mamba_heads": tuple(model_axes),
+        "mamba_state": None,
+        "conv_width": None,
+        "layers": None,               # scan-stacked dim, never sharded
+        "norm": None,
+        # activation dims.  ``sp``: sequence parallelism — the residual
+        # stream (and thus the per-layer scan-saved carry) is sharded over
+        # the model axis between blocks; GSPMD inserts all-gather at
+        # attention K/V and reduce-scatter after projections.
+        "act_batch": tuple(batch_axes),
+        "act_seq": tuple(model_axes) if sp else None,
+        "act_embed": None,
+        "act_heads": tuple(model_axes),
+        "act_vocab": tuple(model_axes),
+        # KV cache dims
+        "kv_batch": tuple(batch_axes),
+        "kv_seq": kv_seq,
+        "kv_heads": kv_heads,
+    }
+    return rules
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    parts = []
+    used: set = set()
+    for name in axes:
+        if name is None:
+            parts.append(None)
+            continue
+        mesh_axes = rules.get(name)
+        if mesh_axes is None:
+            parts.append(None)
+            continue
+        # never map two tensor dims onto the same mesh axis
+        free = tuple(a for a in mesh_axes if a not in used)
+        if not free:
+            parts.append(None)
+            continue
+        used.update(free)
+        parts.append(free if len(free) > 1 else free[0])
+    return P(*parts)
+
+
+def _divisible(dim: int, mesh: Mesh, spec_part) -> bool:
+    if spec_part is None:
+        return True
+    names = spec_part if isinstance(spec_part, tuple) else (spec_part,)
+    k = math.prod(mesh.shape[n] for n in names)
+    return dim % k == 0
+
+
+def valid_pspec(shape: Sequence[int], pspec: P, mesh: Mesh) -> P:
+    """Drop partitions that do not divide the dim (GSPMD would pad; we prefer
+    clean shardings for predictable memory analysis)."""
+    parts = list(pspec) + [None] * (len(shape) - len(pspec))
+    out = [p if _divisible(d, mesh, p) else None for d, p in zip(shape, parts)]
+    return P(*out)
+
+
+def named_sharding(
+    mesh: Mesh, axes: Sequence[Optional[str]], rules: Rules,
+    shape: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    pspec = logical_to_pspec(axes, rules)
+    if shape is not None:
+        pspec = valid_pspec(shape, pspec, mesh)
+    return NamedSharding(mesh, pspec)
+
+
+# --------------------------------------------------------------------------
+# Abstract parameter specs
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    axes: Tuple[Optional[str], ...] = ()
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(s.size for s in jax.tree_util.tree_leaves(specs, is_leaf=is_spec))
+
+
+def abstract_params(specs, mesh: Mesh, rules: Rules):
+    """ShapeDtypeStruct tree with shardings — dry-run inputs, no allocation."""
+    def one(s: ParamSpec):
+        sh = named_sharding(mesh, s.axes, rules, shape=s.shape)
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype), sharding=sh)
+    return tree_map_specs(one, specs)
+
+
+def param_shardings(specs, mesh: Mesh, rules: Rules):
+    return tree_map_specs(
+        lambda s: named_sharding(mesh, s.axes, rules, shape=s.shape), specs)
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize parameters (smokes / real training on small meshes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            std = s.scale / math.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, s.shape, jnp.float32) * std).astype(s.dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spec_axes(specs):
+    """Tree of logical-axes tuples (mirrors the param tree)."""
+    return tree_map_specs(lambda s: s.axes, specs)
+
+
+# --------------------------------------------------------------------------
+# Shape helpers for activations / batches
+# --------------------------------------------------------------------------
+
+_ACT_CTX: list = []
+
+
+class activation_sharding:
+    """Context manager enabling ``shard_act`` constraints during tracing.
+
+    Model code calls ``shard_act(x, logical_axes)`` at propagation-critical
+    points (post-embedding, per-group output, logits, loss terms).  Outside
+    the context it is the identity, so small-mesh tests are unaffected."""
+
+    def __init__(self, mesh: Mesh, rules: Rules):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        _ACT_CTX.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_CTX.pop()
+        return False
+
+
+def shard_act(x, axes: Sequence[Optional[str]]):
+    if not _ACT_CTX:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    sh = named_sharding(mesh, axes, rules, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def batch_specs(
+    shapes: Dict[str, Tuple[Tuple[int, ...], str, Tuple[Optional[str], ...]]],
+    mesh: Mesh, rules: Rules,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Build ShapeDtypeStruct inputs for a step function.
+
+    ``shapes`` maps input name -> (shape, dtype, logical_axes).
+    """
+    out = {}
+    for name, (shape, dtype, axes) in shapes.items():
+        sh = named_sharding(mesh, axes, rules, shape=shape)
+        out[name] = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sh)
+    return out

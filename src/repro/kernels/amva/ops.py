@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the batched-AMVA kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.amva import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def ps_fixed_point(a_over_c, b, think, h_users, iters: int = kernel.PS_ITERS):
+    return kernel.amva_fwd(a_over_c, b, think, h_users, iters=iters,
+                           interpret=not _on_tpu())

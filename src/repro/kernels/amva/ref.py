@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: the batched PS fixed point from the core module."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.mva import ps_response_batch
+
+
+def ps_fixed_point(a_over_c, b, think, h_users):
+    return ps_response_batch(a_over_c, b, think, h_users)

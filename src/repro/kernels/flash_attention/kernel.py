@@ -1,0 +1,136 @@
+"""FlashAttention-2 forward as a Pallas TPU kernel.
+
+Grid: (batch, q_heads, q_blocks, k_blocks) — the trailing k dimension is
+sequential on TPU, so the online-softmax state (acc, m, l) lives in VMEM
+scratch and is carried across k iterations; the output block is written on
+the last k step.  BlockSpecs tile Q/K/V into (block_q x head_dim) /
+(block_k x head_dim) VMEM windows; K/V index maps implement GQA by mapping
+q-head -> kv-head.  Fully-masked k blocks (outside the causal/window band)
+are skipped with ``pl.when`` — on TPU that avoids issuing the MXU work;
+under ``interpret=True`` (CPU validation) semantics are identical.
+
+The backward pass reuses the custom-VJP blockwise recompute from
+``jnp_impl`` (same math as the FA2 backward); see ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int,
+               block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # skip blocks fully outside the causal/window band
+    first_q = qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = kj * block_k
+    last_k = first_k + block_k - 1
+    live = True
+    if causal:
+        live = first_k <= last_q
+    if window:
+        live = jnp.logical_and(live, last_k > first_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                        jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = 512, block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B,S,H,Dh); k/v: (B,S,KV,Dh) -> (B,S,H,Dh).
+
+    ``interpret=True`` runs the kernel body on CPU for validation; on TPU
+    pass ``interpret=False``.
+    """
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(Dh)
+
+    qt = q.transpose(0, 2, 1, 3)                        # (B,H,S,Dh)
+    kt = k.transpose(0, 2, 1, 3)                        # (B,KV,S,Dh)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, kj, g=group: (b, h // g, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, kj, g=group: (b, h // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, qi, kj: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, Dh), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact materialized
+softmax attention with causal/window masks and GQA."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import attention_exact
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0) -> jax.Array:
+    return attention_exact(q, k, v, causal=causal, window=window)

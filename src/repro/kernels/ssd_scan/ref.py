@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: the chunked SSD from the model module."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, B_: jax.Array,
+        C_: jax.Array, *, chunk: int = 128):
+    return ssd_chunked(x, dt, A, B_, C_, chunk)

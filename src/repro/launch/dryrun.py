@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).  Do not move them.
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+from pathlib import Path   # noqa: E402
+
+import jax                 # noqa: E402
+
+from repro.configs.base import SHAPES, cell_supported          # noqa: E402
+from repro.configs.registry import all_cells, get_config, get_shape  # noqa: E402
+from repro.launch.input_specs import cell_inputs               # noqa: E402
+from repro.launch.mesh import make_production_mesh             # noqa: E402
+from repro.optim.adamw import AdamWConfig                      # noqa: E402
+from repro.serve.step import make_decode_step, make_prefill_step  # noqa: E402
+from repro.train.step import make_train_step                   # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+single-pod 16x16 mesh and the 2x16x16 multi-pod mesh, with 512 placeholder
+host devices.  Prints memory_analysis / cost_analysis and records the
+roofline raw terms (HLO FLOPs, bytes, per-kind collective bytes) to JSON for
+EXPERIMENTS.md §Dry-run / §Roofline."""
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by kind.
+
+    For reduce-scatter the moved bytes are the (larger) input operand —
+    result x shard_count; we approximate shard count from replica group size
+    when present on the same line.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) +
+                      r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        shapes_part, kind = m.group(1), m.group(2)
+        if kind + "-done" in stripped.split("(")[0]:
+            continue  # avoid double counting start/done pairs
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes_part))
+        if kind == "reduce-scatter":
+            g = re.search(r"replica_groups=\{\{([0-9,]+)\}", stripped)
+            if g:
+                total *= len(g.group(1).split(","))
+        out[kind] += total
+        counts[kind] += 1
+    return out, counts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, recent_len: int = 256) -> dict:
+    """``recent_len``: two-buffer decode-KV ring size (0 = the paper-
+    baseline single ring, which suffers the DUS-on-sharded-seq collective
+    pathology recorded in EXPERIMENTS.md §Perf)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "supported": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = reason
+        return rec
+
+    from repro.distributed.sharding import activation_sharding
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        rules, args, kwargs = cell_inputs(cfg, shape, mesh,
+                                          recent_len=recent_len)
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig(mode=cfg.optimizer_mode)
+            fn = make_train_step(cfg, opt_cfg)
+            jitted = jax.jit(fn, donate_argnums=(0,))
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(cfg, cache_len=shape.seq_len)
+            jitted = jax.jit(fn)
+        else:
+            fn = make_decode_step(cfg)
+            jitted = jax.jit(fn, donate_argnums=(2,))
+
+        with activation_sharding(mesh, rules):
+            lowered = jitted.lower(*args, **kwargs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses ---------------------------------------------------------
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover - backend dependent
+        rec["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    cbytes, ccounts = collective_bytes(hlo)
+    rec["collective_bytes_static"] = cbytes        # body-counted-once view
+    rec["collective_counts_static"] = ccounts
+    # trip-count-aware parse (XLA-CPU cost_analysis counts while bodies
+    # ONCE; scans under-report ~n_layers x — see launch/hlo_costs.py)
+    from repro.launch.hlo_costs import parse_hlo_costs
+    hc = parse_hlo_costs(hlo)
+    rec["collective_bytes"] = hc.collective_bytes
+    rec["collective_counts"] = hc.collective_counts
+    rec["parsed_flops_per_dev"] = hc.flops
+    rec["parsed_bytes_per_dev"] = hc.bytes
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["n_devices"] = mesh.size
+
+    # analytic per-device input bytes (sharded) — robust memory-fit signal
+    in_bytes = 0
+    for leaf in jax.tree_util.tree_leaves(args):
+        if hasattr(leaf, "sharding") and leaf.sharding is not None:
+            try:
+                shard_shape = leaf.sharding.shard_shape(leaf.shape)
+            except Exception:
+                shard_shape = leaf.shape
+            n = 1
+            for d in shard_shape:
+                n *= d
+            in_bytes += n * leaf.dtype.itemsize
+    rec["input_bytes_per_device"] = int(in_bytes)
+
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"compile={t_compile:.1f}s flops={rec['cost_analysis'].get('flops', 0):.3e} "
+              f"coll={sum(cbytes.values()):.3e}B in/dev={in_bytes/2**30:.2f}GiB")
+        print(f"  memory_analysis: {rec.get('memory_analysis')}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id (default all)")
+    ap.add_argument("--shape", default=None, help="single shape (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--append", action="store_true",
+                    help="merge into existing results file")
+    ap.add_argument("--recent", type=int, default=256,
+                    help="two-buffer decode ring size (0 = baseline ring)")
+    args = ap.parse_args()
+
+    cells = all_cells(include_skipped=True)
+    if args.arch:
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape:
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    records = []
+    if args.append and out_path.exists():
+        records = json.loads(out_path.read_text())
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records
+            if "error" not in r}
+
+    for arch, shape_name, ok, reason in cells:
+        for multi_pod in meshes:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            if (arch, shape_name, mesh_name) in done:
+                continue
+            try:
+                rec = run_cell(arch, shape_name, multi_pod,
+                               recent_len=args.recent)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "supported": ok, "error": str(e),
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: {e}")
+            records = [r for r in records
+                       if not (r["arch"] == arch and r["shape"] == shape_name
+                               and r["mesh"] == mesh_name)]
+            records.append(rec)
+            out_path.write_text(json.dumps(records, indent=1))
+
+    n_ok = sum(1 for r in records if "error" not in r and r.get("supported"))
+    n_skip = sum(1 for r in records if not r.get("supported"))
+    n_fail = sum(1 for r in records if "error" in r)
+    print(f"[dryrun] done: {n_ok} compiled, {n_skip} skipped-by-design, "
+          f"{n_fail} FAILED -> {out_path}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

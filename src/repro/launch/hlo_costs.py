@@ -1,0 +1,223 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts a ``while``
+body ONCE, so scan-over-layers programs under-report FLOPs/bytes/collective
+traffic by ~n_layers (measured 13.8x on granite train_4k).  This module
+parses HLO text directly:
+
+  * splits the module into computations,
+  * recovers each while loop's trip count from the constant bound in its
+    condition computation (jax scans lower to 0..N counters),
+  * attributes every instruction to its computation and multiplies by the
+    product of enclosing trip counts (nested scans multiply),
+  * FLOPs: ``dot`` ops as 2 * prod(result_shape) * prod(contracted dims)
+    (cusotm elementwise flops are <1% for these models and ignored),
+  * bytes: operand+result sizes of dot/fusion/copy/dynamic-update ops
+    (an HBM-traffic estimator: fusion boundaries are materialization
+    points),
+  * collectives: result sizes by kind (reduce-scatter scaled by group size).
+
+Works on both the pre-optimization HLO (global shapes, no collectives) and
+the post-SPMD compiled per-device HLO (collectives present).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s*(\w+)\[([0-9,]*)\][^ ]*\s+dot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_SHAPE_RE = re.compile(r"dot\(\s*[%$]?[\w.\-]+\s*,")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x]
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not line.startswith(" ") and ("{" in line):
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(text: str) -> Optional[str]:
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                return m.group(1)
+    return None
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Largest integer constant in the condition computation (jax scan
+    counters compare LT against the length)."""
+    best = 1
+    for ln in cond_lines:
+        for m in _CONST_RE.finditer(ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multipliers(comps: Dict[str, List[str]], entry: str) -> Dict[str, int]:
+    """computation -> product of enclosing while trip counts."""
+    mult: Dict[str, int] = {entry: 1}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        m = mult[name]
+        for ln in comps.get(name, []):
+            w = _WHILE_RE.search(ln)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                for sub in (body, cond):
+                    new = m * (trips if sub == body else 1)
+                    if mult.get(sub, 0) < new:
+                        mult[sub] = new
+                        stack.append(sub)
+            # also follow plain calls (e.g. remat wrappers)
+            c = re.search(r"\scall\(.*?\),\s*to_apply=%?([\w.\-]+)", ln)
+            if c:
+                sub = c.group(1)
+                if mult.get(sub, 0) < m:
+                    mult[sub] = m
+                    stack.append(sub)
+    return mult
+
+
+def _dot_flops(line: str, operand_shapes: Dict[str, Tuple[str, str]]) -> float:
+    md = _DOT_RE.search(line)
+    if not md:
+        return 0.0
+    out_elems = 1
+    for d in _dims(md.group(2)):
+        out_elems *= d
+    # contracted dims from lhs operand shape
+    mc = _CONTRACT_RE.search(line)
+    args = re.search(r"dot\(([^)]*)\)", line)
+    k = 1
+    if mc and args:
+        lhs_name = args.group(1).split(",")[0].strip().lstrip("%")
+        lhs = operand_shapes.get(lhs_name)
+        if lhs is not None:
+            lhs_dims = _dims(lhs[1])
+            for ci in _dims(mc.group(1)):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+    return 2.0 * out_elems * k
+
+
+# HBM-traffic estimator: output bytes x2 (reads ~= writes program-wide) of
+# materializing ops only.  Standalone elementwise/layout ops (convert,
+# broadcast, transpose, iota, XLA-CPU's wrapped_* kLoop fusions) are fused
+# into consumers on TPU and excluded — counting them inflated the memory
+# term ~7x on the prefill cells.
+_BYTES_OPS = ("dot(", "fusion(", "copy(", "dynamic-update-slice(",
+              "dynamic-slice(", "gather(", "scatter(")
+_FUSED_ON_TPU = re.compile(
+    r"%wrapped_(convert|transpose|broadcast|iota|reshape|bitcast|copy)")
+
+
+def parse_hlo_costs(text: str) -> HloCosts:
+    comps = _split_computations(text)
+    entry = _entry_name(text) or next(iter(comps), None)
+    if entry is None:
+        return HloCosts()
+    mult = _multipliers(comps, entry)
+
+    out = HloCosts()
+    out.trip_counts = {k: v for k, v in mult.items() if v > 1}
+
+    for name, lines in comps.items():
+        m = mult.get(name)
+        if m is None:
+            continue                       # fusion bodies etc.: counted at site
+        # operand shape registry for dot contraction lookup
+        shapes: Dict[str, Tuple[str, str]] = {}
+        for ln in lines:
+            lhs = ln.split(" = ", 1)
+            if len(lhs) == 2:
+                nm = lhs[0].strip().lstrip("%")
+                sm = _SHAPE_RE.search(lhs[1])
+                if sm:
+                    shapes[nm] = (sm.group(1), sm.group(2))
+        for ln in lines:
+            if " dot(" in ln:
+                out.flops += m * _dot_flops(ln, shapes)
+            coll = None
+            for kind in COLLECTIVES:
+                if re.search(rf"\s{kind}(?:-start)?\(", ln):
+                    coll = kind
+                    break
+            if coll:
+                lhs = ln.split(" = ", 1)
+                total = sum(_nbytes(d, s)
+                            for d, s in _SHAPE_RE.findall(lhs[1].split("(")[0])
+                            ) if len(lhs) == 2 else 0
+                if coll == "reduce-scatter":
+                    g = re.search(r"replica_groups=\{\{([0-9,]+)\}", ln)
+                    if g:
+                        total *= len(g.group(1).split(","))
+                out.collective_bytes[coll] = (
+                    out.collective_bytes.get(coll, 0.0) + m * total)
+                out.collective_counts[coll] = (
+                    out.collective_counts.get(coll, 0) + m)
+                continue
+            if any(op in ln for op in _BYTES_OPS) and \
+                    not _FUSED_ON_TPU.search(ln):
+                lhs = ln.split(" = ", 1)
+                if len(lhs) == 2:
+                    sm = _SHAPE_RE.search(lhs[1])
+                    if sm:
+                        out.bytes += 2 * m * _nbytes(sm.group(1), sm.group(2))
+    return out

@@ -1,0 +1,208 @@
+"""Abstract sharded inputs for every (arch x shape x mesh) cell.
+
+Everything here returns ``jax.ShapeDtypeStruct`` trees carrying
+``NamedSharding`` — no device allocation ever happens, which is what lets the
+dry-run lower+compile 340B-parameter cells on a CPU host.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (
+    ParamSpec,
+    Rules,
+    abstract_params,
+    make_rules,
+    named_sharding,
+    tree_map_specs,
+)
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, opt_state_specs
+
+
+def serving_param_specs(cfg: ModelConfig):
+    """Inference weights: bf16 copies of the float32 training params
+    (standard serving practice; halves weight HBM + read traffic)."""
+    def cast(s: ParamSpec):
+        dt = "bfloat16" if s.dtype == "float32" else s.dtype
+        return ParamSpec(s.shape, dt, s.axes, init=s.init, scale=s.scale)
+    return tree_map_specs(cast, api.param_specs(cfg))
+
+
+def rules_for_cell(cfg: ModelConfig, shape: ShapeConfig,
+                   mesh: jax.sharding.Mesh, *,
+                   sp: Optional[bool] = None, fsdp: bool = True) -> Rules:
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    model_size = mesh.shape["model"]
+    if shape.kind == "decode":
+        if shape.name == "long_500k":
+            kv_layout = "seq_data"
+        elif cfg.n_kv_heads and cfg.n_kv_heads % model_size == 0:
+            kv_layout = "heads"
+        else:
+            kv_layout = "seq_model"
+    else:
+        kv_layout = "heads" if (cfg.n_kv_heads and
+                                cfg.n_kv_heads % model_size == 0) \
+            else "seq_model"
+    if sp is None:
+        # sequence parallelism by default on full-sequence cells: the
+        # per-layer saved residual stream otherwise exceeds v5e HBM
+        # (measured: granite train_4k 10.7 GiB/device without SP).
+        sp = shape.kind in ("train", "prefill")
+    if shape.kind == "decode":
+        # inference prefers replicated-over-data (bf16) weights: FSDP would
+        # all-gather every layer's weights per decoded token (measured
+        # 25 MB/layer on granite decode_32k).  Models whose bf16 weights
+        # exceed ~8 GB per model-shard (llama4: 13.6, nemotron: 42) keep
+        # FSDP — the only way to fit v5e HBM.
+        from repro.distributed.sharding import param_count
+        from repro.models import api as _api
+        bytes_per_model_shard = 2.0 * param_count(_api.param_specs(cfg)) \
+            / model_size
+        fsdp = bytes_per_model_shard > 8e9
+    return make_rules(batch_axes=batch_axes, kv_layout=kv_layout, fsdp=fsdp,
+                      sp=sp)
+
+
+# --------------------------------------------------------------------------
+# Batch specs
+# --------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig,
+               mesh: jax.sharding.Mesh, rules: Rules,
+               *, with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+
+    def mk(shp, dtype, axes):
+        sh = named_sharding(mesh, axes, rules, shape=shp)
+        return jax.ShapeDtypeStruct(shp, jnp.dtype(dtype), sharding=sh)
+
+    batch = {"tokens": mk((B, S), "int32", ("act_batch", "act_seq"))}
+    if with_labels:
+        batch["labels"] = mk((B, S), "int32", ("act_batch", "act_seq"))
+    if cfg.frontend == "patches":
+        batch["patches"] = mk((B, cfg.frontend_len, cfg.d_model), "bfloat16",
+                              ("act_batch", "act_seq", "act_embed"))
+    if cfg.frontend == "frames":
+        batch["frames"] = mk((B, cfg.frontend_len, cfg.d_model), "bfloat16",
+                             ("act_batch", "act_seq", "act_embed"))
+    return batch
+
+
+# --------------------------------------------------------------------------
+# Cache specs (decode cells)
+# --------------------------------------------------------------------------
+
+_CACHE_LEAF_AXES = {
+    "k": ("kv_batch", "kv_seq", "kv_heads", None),
+    "v": ("kv_batch", "kv_seq", "kv_heads", None),
+    "pos": ("kv_seq",),
+    # recent ring: replicated along seq (tiny; receives the DUS writes)
+    "rk": ("kv_batch", None, "kv_heads", None),
+    "rv": ("kv_batch", None, "kv_heads", None),
+    "rpos": (None,),
+    "cross_k": ("kv_batch", "kv_seq", "kv_heads", None),
+    "cross_v": ("kv_batch", "kv_seq", "kv_heads", None),
+    "state": ("kv_batch", "mamba_heads", None, None),
+    "conv_x": ("kv_batch", None, "mamba_inner"),
+    "conv_B": ("kv_batch", None, "mamba_state"),
+    "conv_C": ("kv_batch", None, "mamba_state"),
+}
+
+# single-ring caches take in-place DUS writes at traced offsets -> their
+# seq dim must stay replicated (GSPMD otherwise round-trips the buffer
+# through a full all-gather per token).  Two-buffer caches (with "rk")
+# keep the main k/v/pos sharded and write only to the replicated ring.
+_RING_LEAF_AXES = {
+    "k": ("kv_batch", None, "kv_heads", None),
+    "v": ("kv_batch", None, "kv_heads", None),
+    "pos": (None,),
+}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                mesh: jax.sharding.Mesh, rules: Rules,
+                recent_len: int = 0):
+    """Abstract decode-cache tree with shardings (via eval_shape)."""
+    shaped = jax.eval_shape(
+        lambda: api.init_caches(cfg, batch, cache_len,
+                                recent_len=recent_len))
+    stacked = cfg.is_encoder_decoder or cfg.n_groups > 1
+
+    def attach(path, leaf):
+        parent_keys = [p.key for p in path
+                       if isinstance(p, jax.tree_util.DictKey)]
+        name = parent_keys[-1] if parent_keys else None
+        axes = _CACHE_LEAF_AXES[name]
+        if name in _RING_LEAF_AXES:
+            # single-ring caches (local-window layers, or everything when
+            # recent_len==0) take in-place writes -> replicate the seq dim;
+            # only full-length two-buffer main caches keep kv_seq sharding.
+            is_stacked_guess = stacked and len(leaf.shape) == len(axes) + 1
+            seq_axis = (1 if name != "pos" else 0) + int(is_stacked_guess)
+            is_main = recent_len > 0 and leaf.shape[seq_axis] == cache_len
+            if not is_main:
+                axes = _RING_LEAF_AXES[name]
+        # stacked group caches carry a leading layers dim
+        is_stacked = stacked and len(leaf.shape) == len(axes) + 1
+        if is_stacked:
+            axes = ("layers",) + axes
+        sh = named_sharding(mesh, axes, rules, shape=leaf.shape)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map_with_path(attach, shaped)
+
+
+# --------------------------------------------------------------------------
+# State specs (train cells)
+# --------------------------------------------------------------------------
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                      mesh: jax.sharding.Mesh, rules: Rules):
+    pspecs = api.param_specs(cfg)
+    ospecs = opt_state_specs(opt_cfg, pspecs)
+    return {
+        "params": abstract_params(pspecs, mesh, rules),
+        "opt": abstract_params(ospecs, mesh, rules),
+    }
+
+
+# --------------------------------------------------------------------------
+# Full cell inputs
+# --------------------------------------------------------------------------
+
+def cell_inputs(
+    cfg: ModelConfig, shape: ShapeConfig, mesh: jax.sharding.Mesh,
+    opt_cfg: Optional[AdamWConfig] = None, recent_len: int = 0,
+) -> Tuple[Rules, Tuple, Dict]:
+    """Returns (rules, args, kwargs) matching the cell's step function.
+
+    ``recent_len > 0`` enables the two-buffer decode KV layout (the §Perf
+    optimization; 0 = paper-baseline single ring)."""
+    rules = rules_for_cell(cfg, shape, mesh)
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig(mode=cfg.optimizer_mode)
+        state = train_state_specs(cfg, opt_cfg, mesh, rules)
+        batch = batch_spec(cfg, shape, mesh, rules, with_labels=True)
+        return rules, (state, batch), {}
+    if shape.kind == "prefill":
+        params = abstract_params(serving_param_specs(cfg), mesh, rules)
+        batch = batch_spec(cfg, shape, mesh, rules, with_labels=False)
+        return rules, (params, batch), {}
+    # decode
+    params = abstract_params(serving_param_specs(cfg), mesh, rules)
+    B = shape.global_batch
+    caches = cache_specs(cfg, B, shape.seq_len, mesh, rules,
+                         recent_len=recent_len)
+    tok_sh = named_sharding(mesh, ("act_batch", None), rules, shape=(B, 1))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    pos_sh = named_sharding(mesh, (), rules, shape=())
+    cur_pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=pos_sh)
+    return rules, (params, token, caches, cur_pos), {}

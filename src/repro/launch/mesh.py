@@ -1,0 +1,23 @@
+"""Production meshes.  Functions, not module constants, so importing this
+module never touches jax device state (the dry-run sets the 512-device
+XLA flag before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(*, data: int = 0, model: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (CPU tests: 1 device -> 1x1)."""
+    n = len(jax.devices())
+    if data == 0:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,219 @@
+"""Roofline analysis from the dry-run record (assignment §Roofline).
+
+Per (arch x shape x mesh) cell, derive from the compiled artifact:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+
+(The dry-run HLO is the post-SPMD per-device program, so the per-device
+terms ARE the per-chip terms of the prompt's formulas.)  Additionally:
+
+    MODEL_FLOPS = 6 N_active D (train) | 2 N_active D (prefill/decode)
+    useful-compute ratio = MODEL_FLOPS/chips / HLO_FLOPs_per_device
+
+which exposes remat recompute, masked-block waste and dispatch overheads.
+Hardware constants: v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def active_param_count(cfg) -> float:
+    """Per-token active parameters (MoE counts shared + top_k experts)."""
+    from repro.distributed.sharding import param_count, tree_map_specs
+    from repro.models import api
+
+    total = param_count(api.param_specs(cfg))
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    wi_cols = 2 if cfg.gated_mlp else 1
+    per_expert = cfg.d_model * m.d_ff_expert * (wi_cols + 1)
+    n_moe_layers = cfg.n_layers // max(cfg.moe_every, 1)
+    inactive = per_expert * (m.n_experts - m.top_k) * n_moe_layers
+    return float(total - inactive)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global model FLOPs of one step (6ND train / 2ND inference)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1          # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    t_compute_s: float
+    t_memory_s: float               # analytic (TPU kernels; see below)
+    t_collective_s: float
+    bottleneck: str
+    roofline_fraction: float        # compute term / dominant term
+    model_flops: float
+    hlo_flops_per_dev: float
+    useful_ratio: float             # model_flops/chips / hlo_flops_per_dev
+    t_memory_hlo_s: float = 0.0     # XLA-CPU-lowering traffic (diagnostic)
+    note: str = ""
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def analytic_memory_bytes(cfg, shape, chips: int) -> float:
+    """First-principles per-device HBM traffic of one step on the TPU
+    target (where flash-attention/SSD block temporaries live in VMEM via
+    the Pallas kernels — the XLA-CPU lowering materializes them, which
+    makes the HLO-parsed bytes a large overestimate of the deployed path;
+    kept as a diagnostic in ``t_memory_hlo_s``).
+
+    Model (documented napkin; validated against HLO on small unrolled
+    variants in tests):
+      train:   3x gathered weights (fwd+bwd+refwd reads)
+               + grads r/w + opt m,v (+master) r/w on the local shard
+               + residual-carry save/restore (+1 recompute read)
+               + KV write+read per attention layer + logits r/w (f32)
+      prefill: 1x weights read + activations write/read + KV cache write
+      decode:  1x weights read + KV cache read (+ ring write)
+    """
+    from repro.distributed.sharding import param_count
+    from repro.models import api
+
+    P = param_count(api.param_specs(cfg))
+    pbytes = 2.0 if cfg.param_dtype == "bfloat16" else 4.0
+    model_shards = 16 if chips >= 256 else max(1, chips)
+    data_shards = max(1, chips // model_shards)
+    D = cfg.d_model
+    tokens = shape.global_batch * shape.seq_len
+    tokens_dev = tokens / chips                  # batch x seq sharded (SP)
+    L = cfg.n_layers
+    kv_dim = cfg.kv_dim if cfg.n_kv_heads else 0
+    n_attn = sum(1 for k in cfg.layer_kinds() if k != "mamba") * max(
+        cfg.n_groups, 1)
+    vocab_dev = cfg.padded_vocab / model_shards
+
+    if shape.kind == "train":
+        opt_bytes = {"fp32": 8.0, "8bit": 6.0}.get(cfg.optimizer_mode, 8.0)
+        w = 3.0 * P * pbytes / model_shards          # gathered reads
+        g_opt = P / chips * (8.0 + 2.0 * opt_bytes)  # grads + moments r/w
+        acts = 3.0 * L * tokens_dev * D * 2.0        # carry w+r+recompute
+        kv = 4.0 * n_attn * tokens_dev * kv_dim * 2.0
+        logits = 3.0 * tokens_dev * vocab_dev * 4.0
+        return w + g_opt + acts + kv + logits
+    if shape.kind == "prefill":
+        w = P * pbytes / model_shards
+        acts = 2.0 * L * tokens_dev * D * 2.0
+        kv = 2.0 * n_attn * tokens_dev * kv_dim * 2.0
+        logits = shape.global_batch / chips * vocab_dev * 4.0
+        return w + acts + kv + logits
+    # decode: read all weights once + read the KV cache once
+    w = P * pbytes / model_shards
+    cache_tokens_dev = shape.global_batch * shape.seq_len / chips
+    kv = 2.0 * n_attn * cache_tokens_dev * kv_dim * 2.0
+    if cfg.family in ("ssm",):
+        kv = L * shape.global_batch / data_shards * 4e5
+    return w + kv
+
+
+def analyze_record(rec: dict) -> Optional[RooflineRow]:
+    from repro.configs.registry import get_config, get_shape
+
+    if "error" in rec or not rec.get("supported"):
+        return None
+    ca = rec.get("cost_analysis", {})
+    if "flops" not in ca:
+        return None
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = rec.get("n_devices", 256)
+
+    # prefer the trip-count-aware parse (cost_analysis counts scan bodies
+    # once on the CPU backend); fall back to raw cost_analysis
+    flops = rec.get("parsed_flops_per_dev") or ca["flops"]
+    bytes_hlo = rec.get("parsed_bytes_per_dev") or ca["bytes_accessed"]
+    t_comp = flops / PEAK_FLOPS
+    t_mem_hlo = bytes_hlo / HBM_BW
+    # memory term of the DEPLOYED path (Pallas kernels keep attention/SSD
+    # block temporaries in VMEM): analytic model, capped by the HLO parse
+    t_mem = min(analytic_memory_bytes(cfg, shape, chips) / HBM_BW, t_mem_hlo)
+    t_coll = sum(rec["collective_bytes"].values()) / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    dom = terms[bottleneck]
+    mf = model_flops(cfg, shape)
+    useful = (mf / chips) / max(flops, 1e-30)
+    frac = t_comp / max(dom, 1e-30)
+    note = _suggestion(bottleneck, useful, rec)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_compute_s=t_comp, t_memory_s=t_mem, t_collective_s=t_coll,
+        bottleneck=bottleneck, roofline_fraction=frac,
+        model_flops=mf, hlo_flops_per_dev=flops,
+        useful_ratio=useful, t_memory_hlo_s=t_mem_hlo, note=note)
+
+
+def _suggestion(bottleneck: str, useful: float, rec: dict) -> str:
+    if bottleneck == "collective":
+        big = max(rec["collective_bytes"], key=rec["collective_bytes"].get)
+        return (f"dominant collective is {big}; reduce via sharding that "
+                f"keeps the contraction local or int8-compressed reduction")
+    if bottleneck == "memory":
+        return ("HBM-bound: raise arithmetic intensity (fuse, bigger "
+                "per-chip batch, bf16 activations end-to-end)")
+    if useful < 0.5:
+        return ("compute-bound but <50% useful FLOPs: cut remat recompute "
+                "or masked-block waste (block-sparse attention schedule)")
+    return "compute-bound; near roofline for this shape"
+
+
+def analyze_file(path: str = "results/dryrun.json") -> List[RooflineRow]:
+    recs = json.loads(open(path).read())
+    rows = [analyze_record(r) for r in recs]
+    return [r for r in rows if r is not None]
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} "
+           f"{'t_comp(ms)':>10s} {'t_mem(ms)':>10s} {'t_coll(ms)':>10s} "
+           f"{'bound':>10s} {'frac':>6s} {'useful':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r.mesh, r.arch, r.shape)):
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.mesh:8s} "
+            f"{r.t_compute_s*1e3:10.2f} {r.t_memory_s*1e3:10.2f} "
+            f"{r.t_collective_s*1e3:10.2f} {r.bottleneck:>10s} "
+            f"{r.roofline_fraction:6.2f} {r.useful_ratio:7.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = analyze_file(args.dryrun)
+    print(format_table(rows))
+    with open(args.out, "w") as f:
+        json.dump([r.as_dict() for r in rows], f, indent=1)
+    print(f"\n{len(rows)} cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+Loads (or random-inits) a reduced config, serves a synthetic request
+stream through the batching engine and prints latency/throughput."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.distributed.sharding import init_params
+from repro.models import api
+from repro.serve.engine import BatchingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=list(ARCH_IDS))
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    eng = BatchingEngine(cfg, params, max_batch=args.batch)
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size, size=args.prompt).tolist()
+        eng.submit(prompt, gen_len=args.gen)
+    done = eng.run()
+    print(BatchingEngine.summarize(done))
+
+
+if __name__ == "__main__":
+    main()

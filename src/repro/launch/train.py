@@ -1,0 +1,46 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains reduced (smoke) configs end-to-end with
+the full production substrate (checkpointing, preemption handling, data
+pipeline); on TPU the same entry point scales to the production mesh with
+``--full`` (sharding rules identical to the dry-run)."""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=list(ARCH_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (TPU mesh required)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    tc = TrainerConfig(
+        steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, microbatches=args.microbatches,
+        compress_grads=args.compress_grads,
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps,
+                        warmup=max(10, args.steps // 20),
+                        mode=cfg.optimizer_mode))
+    trainer = Trainer(cfg, tc)
+    state, step = trainer.run()
+    losses = trainer.losses()
+    print(f"[train] done at step {step}: loss {losses[0]:.3f} -> "
+          f"{losses[-1]:.3f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Family-dispatched model API — one entry point for every assigned arch."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    if cfg.is_encoder_decoder:
+        return encdec.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+def forward_logits(
+    cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+    attn_impl: str = "auto", ssd_impl: str = "auto",
+    want_caches: bool = False, cache_len: int = 0,
+):
+    """Returns (logits, aux_loss, caches|None) for any family.
+
+    batch keys: ``tokens`` always; ``patches`` (vlm) / ``frames`` (audio)
+    are the modality-stub embeddings.
+    """
+    if cfg.is_encoder_decoder:
+        return encdec.forward(cfg, params, batch["frames"], batch["tokens"],
+                              want_caches=want_caches, cache_len=cache_len)
+    extra = batch.get("patches")
+    return transformer.forward(
+        cfg, params, batch["tokens"], extra_embeds=extra,
+        attn_impl=attn_impl, ssd_impl=ssd_impl,
+        want_caches=want_caches, cache_len=cache_len)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                recent_len: int = 0) -> Params:
+    if cfg.is_encoder_decoder:
+        return encdec.init_caches(cfg, batch, cache_len,
+                                  recent_len=recent_len)
+    return transformer.init_caches(cfg, batch, cache_len,
+                                   recent_len=recent_len)
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                caches: Params, cur_pos: jax.Array):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(cfg, params, token, caches, cur_pos)
+    return transformer.decode_step(cfg, params, token, caches, cur_pos)

@@ -1,0 +1,148 @@
+"""Encoder-decoder backbone (whisper-tiny).  Conv/mel frontend is a STUB:
+inputs are precomputed frame embeddings (B, frames, d_model) per the
+assignment brief; the transformer encoder/decoder and cross-attention are
+real.  Decode caches: ring-buffer self-KV + static cross-KV.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard_act
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+_ACT = ("act_batch", "act_seq", "act_embed")
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    V, D = cfg.padded_vocab, cfg.d_model
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    enc_prefix, dec_prefix = (ne,), (nd,)
+    return {
+        "embed": ParamSpec((V, D), cfg.param_dtype, ("vocab", "embed")),
+        "enc": {
+            "attn": L.attn_specs(cfg, enc_prefix),
+            "mlp": L.mlp_specs(cfg, prefix=enc_prefix),
+        },
+        "dec": {
+            "self": L.attn_specs(cfg, dec_prefix),
+            "cross": L.cross_attn_specs(cfg, dec_prefix),
+            "mlp": L.mlp_specs(cfg, prefix=dec_prefix),
+        },
+        "enc_ln": ParamSpec((D,), "float32", ("embed",), init="zeros"),
+        "final_ln": ParamSpec((D,), "float32", ("embed",), init="zeros"),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, D) precomputed frame embeddings -> encoder states."""
+    B, F, _ = frames.shape
+    h = frames.astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(F), (B, F))
+
+    def body(h, p):
+        h, _ = L.attn_apply(cfg, p["attn"], h, positions=positions,
+                            causal=False)
+        h = L.mlp_apply(cfg, p["mlp"], h)
+        return shard_act(h, _ACT), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = lax.scan(body, h, params["enc"])
+    return L.rms_norm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def forward(
+    cfg: ModelConfig, params: Params, frames: jax.Array, tokens: jax.Array,
+    *, want_caches: bool = False, cache_len: int = 0,
+):
+    """Full enc-dec forward.  Returns (logits, aux=0, caches|None)."""
+    enc = encode(cfg, params, frames)
+    emb = params["embed"]
+    h = jnp.take(emb, tokens, axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+    h = shard_act(h, _ACT)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if not cache_len:
+        cache_len = S
+
+    def body(h, p):
+        h, kv = L.attn_apply(cfg, p["self"], h, positions=positions,
+                             return_kv=want_caches)
+        h, _ = L.attn_apply(cfg, p["cross"], h, positions=positions,
+                            kv_source=enc)
+        h = L.mlp_apply(cfg, p["mlp"], h)
+        h = shard_act(h, _ACT)
+        if want_caches:
+            from repro.models.transformer import _kv_to_ring
+            ring = _kv_to_ring(cfg, "global", kv, cache_len)
+            # cross K/V are static per request
+            ck = (enc @ p["cross"]["wk"].astype(h.dtype)).reshape(
+                B, -1, cfg.n_kv_heads, cfg.head_dim)
+            cv = (enc @ p["cross"]["wv"].astype(h.dtype)).reshape(
+                B, -1, cfg.n_kv_heads, cfg.head_dim)
+            return h, {"self": ring, "cross_k": ck.astype(jnp.bfloat16),
+                       "cross_v": cv.astype(jnp.bfloat16)}
+        return h, None
+
+    if cfg.remat and not want_caches:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, caches = lax.scan(body, h, params["dec"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    from repro.models.transformer import _logits_from_hidden
+    logits = _logits_from_hidden(cfg, h, emb)
+    return logits, jnp.zeros((), jnp.float32), caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                recent_len: int = 0) -> Params:
+    nd = cfg.n_layers
+    ring = L.make_cache(cfg, batch, cache_len, recent=recent_len)
+    cross = jnp.zeros((batch, cfg.frontend_len, cfg.n_kv_heads, cfg.head_dim),
+                      jnp.bfloat16)
+    one = {"self": ring, "cross_k": cross, "cross_v": cross}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (nd,) + x.shape).copy(), one)
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, token: jax.Array,
+    caches: Params, cur_pos: jax.Array,
+):
+    """One decoder step with cached cross-KV."""
+    emb = params["embed"]
+    h = jnp.take(emb, token, axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+    B = h.shape[0]
+    positions = jnp.broadcast_to(cur_pos[None], (B, 1))
+
+    def body(h, xs):
+        p, c = xs
+        h, new_ring = L.attn_apply(cfg, p["self"], h, positions=positions,
+                                   cache=c["self"], cur_pos=cur_pos)
+        # cross attention over static cached K/V
+        hq = L.rms_norm(h, p["cross"]["ln"], cfg.norm_eps)
+        q = (hq @ p["cross"]["wq"].astype(hq.dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        out = L.attention_exact(q, c["cross_k"].astype(hq.dtype),
+                                c["cross_v"].astype(hq.dtype), causal=False)
+        h = h + out.reshape(B, 1, cfg.q_dim) @ p["cross"]["wo"].astype(hq.dtype)
+        h = L.mlp_apply(cfg, p["mlp"], h)
+        return h, {"self": new_ring, "cross_k": c["cross_k"],
+                   "cross_v": c["cross_v"]}
+
+    h, new_caches = lax.scan(body, h, (params["dec"], caches))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    from repro.models.transformer import _logits_from_hidden
+    logits = _logits_from_hidden(cfg, h, emb)
+    return logits, new_caches

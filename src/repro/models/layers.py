@@ -1,0 +1,456 @@
+"""Core transformer building blocks (pure-functional JAX).
+
+All parameters are described by ``ParamSpec`` trees (see
+``repro.distributed.sharding``) so the same definitions drive smoke tests,
+real training and the 512-device abstract dry-run.
+
+Attention comes in three execution strategies:
+  * exact einsum (small sequences, also the test oracle),
+  * chunked online-softmax (flash-style) ``lax.scan`` for long sequences —
+    bounds activation memory to O(S·block) on any backend,
+  * the Pallas TPU kernel in ``repro.kernels.flash_attention`` (selected via
+    ``attn_impl='pallas'``).
+Sliding-window (local) layers restrict the k-range structurally (compute
+O(S·w), not masked O(S²)).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard_act
+
+Params = Dict[str, Any]
+
+# Megatron-SP interior layout: inside attention the SEQUENCE is gathered
+# and HEADS shard over the model axis (without this constraint GSPMD keeps
+# heads replicated under sequence parallelism — measured 16x extra
+# attention-logits traffic on granite train_4k).
+_QKV_ACT = ("act_batch", None, "act_heads", None)
+
+# --------------------------------------------------------------------------
+# Norms / activations / rope
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return partial(jax.nn.gelu, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Attention — exact / chunked / decode
+# --------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _gqa_expand(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,KV,Dh) -> (B,S,H,Dh) by repeating each kv head."""
+    n_kv = k.shape[-2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=-2)
+
+
+def attention_exact(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention. q:(B,Sq,H,Dh) k,v:(B,Sk,KV,Dh)."""
+    n_heads = q.shape[-2]
+    k = _gqa_expand(k, n_heads)
+    v = _gqa_expand(v, n_heads)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(q.shape[1]) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def attention_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0,
+    block_q: int = 1024, block_k: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention with online softmax (pure jnp/lax).
+
+    Memory O(S·block); for ``window > 0`` only ceil(window/block_k)+1 k-blocks
+    are visited per q-block (structural O(S·w) compute).
+    """
+    B, S, H, Dh = q.shape
+    n_kv = k.shape[-2]
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(Dh)
+    group = H // n_kv
+
+    if window:
+        k_span = min(nk, int(math.ceil(window / block_k)) + 1)
+    else:
+        k_span = nk
+
+    qb = q.reshape(B, nq, block_q, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_and_block):
+        qi, qblk = qi_and_block                       # (), (B,block_q,H,Dh)
+        qpos = qi * block_q + jnp.arange(block_q)
+
+        # first visited k block index
+        kj0 = jnp.maximum(qi * block_q // block_k - (k_span - 1), 0) \
+            if window else 0
+
+        def kv_step(carry, j):
+            acc, m, l = carry
+            kj = kj0 + j if window else j
+            kstart = kj * block_k
+            kblk = lax.dynamic_slice_in_dim(k, kstart, block_k, axis=1)
+            vblk = lax.dynamic_slice_in_dim(v, kstart, block_k, axis=1)
+            kblk = _gqa_expand(kblk, H)
+            vblk = _gqa_expand(vblk, H)
+            logits = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk)
+            logits = logits.astype(jnp.float32) * scale
+            kpos = kstart + jnp.arange(block_k)
+            mask = jnp.ones((block_q, block_k), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, block_q, Dh), jnp.float32)
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        n_visit = k_span if window else nk
+        (acc, m, l), _ = lax.scan(
+            kv_step, (acc0, m0, l0), jnp.arange(n_visit))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return None, out.astype(q.dtype).transpose(0, 2, 1, 3)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
+
+
+def attention_decode(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    cache_positions: jax.Array, cur_pos: jax.Array, *, window: int = 0,
+) -> jax.Array:
+    """One-token attention over a (ring-buffered) cache.
+
+    q: (B,1,H,Dh); caches: (B,Sc,KV,Dh); cache_positions: (Sc,) absolute
+    positions per slot (−1 = unwritten); cur_pos: scalar current position.
+    GQA via grouped einsums (no repeat-expansion of the cache).
+    """
+    B, _, H, Dh = q.shape
+    KV = k_cache.shape[-2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    logits = logits * scale
+    logits = shard_act(logits, ("act_batch", "kv_heads", None, "kv_seq"))
+    valid = (cache_positions >= 0) & (cache_positions <= cur_pos)
+    if window:
+        valid &= cache_positions > cur_pos - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache)
+    return out.reshape(B, 1, H, Dh)
+
+
+# --------------------------------------------------------------------------
+# Attention block (params + apply)
+# --------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, prefix: Tuple[int, ...] = ()) -> Params:
+    D, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    pd = cfg.param_dtype
+    lead = prefix
+    ax = ("layers",) * len(prefix)
+    return {
+        "ln": ParamSpec(lead + (D,), "float32", ax + ("embed",), init="zeros"),
+        "wq": ParamSpec(lead + (D, Q), pd, ax + ("embed", "heads_merged")),
+        "wk": ParamSpec(lead + (D, KV), pd, ax + ("embed", "heads_merged")),
+        "wv": ParamSpec(lead + (D, KV), pd, ax + ("embed", "heads_merged")),
+        "wo": ParamSpec(lead + (Q, D), pd, ax + ("heads_merged", "embed")),
+    }
+
+
+def cross_attn_specs(cfg: ModelConfig, prefix: Tuple[int, ...] = ()) -> Params:
+    return attn_specs(cfg, prefix)
+
+
+def make_cache(cfg: ModelConfig, batch: int, length: int,
+               dtype=jnp.bfloat16, recent: int = 0) -> Params:
+    """Decode KV cache.  With ``recent > 0`` the cache is TWO buffers:
+
+      * ``k/v/pos``  — the large prefill cache, READ-ONLY during decode so
+        it can shard along the sequence dim (a dynamic-update-slice at a
+        traced index along a sharded dim makes GSPMD all-gather the whole
+        cache every token — measured 872 ms of collectives per decoded
+        token on granite decode_32k);
+      * ``rk/rv/rpos`` — a small replicated ring the new tokens append to;
+        the serving engine folds it into the main cache out-of-step.
+    """
+    c = {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+    if recent > 0:
+        c["rk"] = jnp.zeros((batch, recent, cfg.n_kv_heads, cfg.head_dim),
+                            dtype)
+        c["rv"] = jnp.zeros((batch, recent, cfg.n_kv_heads, cfg.head_dim),
+                            dtype)
+        c["rpos"] = jnp.full((recent,), -1, jnp.int32)
+    return c
+
+
+def _attention_partial(q, k, v, valid):
+    """Unnormalized attention over one KV source.
+
+    q: (B,1,H,Dh); k/v: (B,S,KV,Dh); valid: (S,) bool.
+    Returns (acc (B,H,Dh), m (B,H), l (B,H)) partial-softmax stats.
+
+    The logits constraint keeps the KV-sharded dim sharded (flash-decoding
+    style: partial max/sum per shard + tiny cross-shard reductions).
+    Without it GSPMD resolves the heads-vs-seq conflict by all-gathering
+    the FULL KV cache per layer (measured 2x537 MB x 40 layers per decoded
+    token on granite decode_32k).
+
+    GQA contracts via grouped einsums — ``jnp.repeat``-expanding K/V would
+    materialize group_size x the cache every layer (4x on granite)."""
+    B, _, H, Dh = q.shape
+    KV = k.shape[-2]
+    G = H // KV
+    qg = q[:, 0].reshape(B, KV, G, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32)
+    logits = logits * scale                                   # (B,KV,G,S)
+    # kv_heads/kv_seq rules are layout-aware: exactly one maps to the model
+    # axis depending on the cell's KV layout
+    logits = shard_act(logits, ("act_batch", "kv_heads", None, "kv_seq"))
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1)                                   # (B,KV,G)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype),
+                     v).astype(jnp.float32)
+    return (acc.reshape(B, H, Dh), m.reshape(B, H), l.reshape(B, H))
+
+
+def _merge_partials(parts):
+    """Combine partial-softmax (acc, m, l) triples into normalized output."""
+    m = parts[0][1]
+    for _, mi, _ in parts[1:]:
+        m = jnp.maximum(m, mi)
+    acc = jnp.zeros_like(parts[0][0])
+    l = jnp.zeros_like(parts[0][2])
+    for acc_i, m_i, l_i in parts:
+        corr = jnp.exp(m_i - m)
+        acc = acc + acc_i * corr[..., None]
+        l = l + l_i * corr
+    return acc / jnp.maximum(l, 1e-37)[..., None]
+
+
+def attn_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array, *,
+    positions: jax.Array, window: int = 0, causal: bool = True,
+    cache: Optional[Params] = None, cur_pos: Optional[jax.Array] = None,
+    kv_source: Optional[jax.Array] = None, attn_impl: str = "auto",
+    return_kv: bool = False,
+):
+    """Self- or cross-attention block with pre-norm and residual.
+
+    Modes:
+      * full (train / prefill): ``cache is None``; optionally
+        ``return_kv`` to hand back roped K/V for cache construction.
+      * decode: ``cache`` given — one-token query, ring-buffer update.
+      * cross: ``kv_source`` given (encoder states) — no rope on K.
+    """
+    B = x.shape[0]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, -1, cfg.n_heads, cfg.head_dim)
+
+    if kv_source is not None:                       # cross attention
+        src = kv_source.astype(h.dtype)
+        k = (src @ p["wk"].astype(h.dtype)).reshape(
+            B, -1, cfg.n_kv_heads, cfg.head_dim)
+        v = (src @ p["wv"].astype(h.dtype)).reshape(
+            B, -1, cfg.n_kv_heads, cfg.head_dim)
+        out = attention_exact(q, k, v, causal=False)
+        out = out.reshape(B, -1, cfg.q_dim) @ p["wo"].astype(h.dtype)
+        return x + out, None
+
+    q = apply_rope(q, positions, cfg.rope_theta)
+
+    if cache is None:                                # full self-attention
+        k = (h @ p["wk"].astype(h.dtype)).reshape(
+            B, -1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["wv"].astype(h.dtype)).reshape(
+            B, -1, cfg.n_kv_heads, cfg.head_dim)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q = shard_act(q, _QKV_ACT)
+        k = shard_act(k, _QKV_ACT)
+        v = shard_act(v, _QKV_ACT)
+        S = q.shape[1]
+        if attn_impl == "pallas":
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+        elif S > 2048 and S % 1024 == 0 and attn_impl != "exact":
+            # custom-VJP flash attention: O(S·block) live memory in fwd AND
+            # bwd (a plain scan would stack per-block logits as residuals)
+            from repro.kernels.flash_attention.jnp_impl import flash_attention
+            out = flash_attention(q, k, v, causal, window)
+        else:
+            out = attention_exact(q, k, v, causal=causal, window=window)
+        out = shard_act(out, _QKV_ACT)
+        out = out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(h.dtype)
+        # constrain the projection output seq-sharded BEFORE the residual
+        # add: the TP reduction becomes a bf16 reduce-scatter instead of a
+        # full f32 all-reduce (convert-hoisting otherwise upcasts first)
+        out = shard_act(out, ("act_batch", "act_seq", "act_embed"))
+        out = checkpoint_name(out, "attn_proj")
+        kv = (k, v) if return_kv else None
+        return x + out, kv
+
+    # ---- decode: single token ---------------------------------------------
+    assert cur_pos is not None
+    k_new = (h @ p["wk"].astype(h.dtype)).reshape(
+        B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v_new = (h @ p["wv"].astype(h.dtype)).reshape(
+        B, 1, cfg.n_kv_heads, cfg.head_dim)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    if "rk" in cache:
+        # two-buffer: main cache read-only (sequence-shardable); the new
+        # token goes into the small replicated recent ring; attention is
+        # the partial-softmax merge of both sources.
+        R = cache["rk"].shape[1]
+        slot = (cur_pos % R).astype(jnp.int32)
+        rk = lax.dynamic_update_slice_in_dim(
+            cache["rk"], k_new.astype(cache["rk"].dtype), slot, axis=1)
+        rv = lax.dynamic_update_slice_in_dim(
+            cache["rv"], v_new.astype(cache["rv"].dtype), slot, axis=1)
+        rpos = lax.dynamic_update_slice_in_dim(
+            cache["rpos"], cur_pos[None].astype(jnp.int32), slot, axis=0)
+
+        def validity(pos_arr):
+            valid = (pos_arr >= 0) & (pos_arr <= cur_pos)
+            if window:
+                valid &= pos_arr > cur_pos - window
+            return valid
+
+        part_main = _attention_partial(
+            q, cache["k"].astype(h.dtype), cache["v"].astype(h.dtype),
+            validity(cache["pos"]))
+        part_recent = _attention_partial(
+            q, rk.astype(h.dtype), rv.astype(h.dtype), validity(rpos))
+        merged = _merge_partials([part_main, part_recent])    # (B,H,Dh)
+        out = merged.astype(h.dtype)[:, None]                 # (B,1,H,Dh)
+        out = out.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(h.dtype)
+        new_cache = {"k": cache["k"], "v": cache["v"], "pos": cache["pos"],
+                     "rk": rk, "rv": rv, "rpos": rpos}
+        return x + out, new_cache
+
+    # single ring buffer (small/local caches — kept replicated)
+    length = cache["k"].shape[1]
+    slot = (cur_pos % length).astype(jnp.int32)
+    k_cache = lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    pos_arr = lax.dynamic_update_slice_in_dim(
+        cache["pos"], cur_pos[None].astype(jnp.int32), slot, axis=0)
+    out = attention_decode(
+        q, k_cache.astype(h.dtype), v_cache.astype(h.dtype),
+        pos_arr, cur_pos, window=window)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(h.dtype)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_arr}
+    return x + out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP block
+# --------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None,
+              prefix: Tuple[int, ...] = ()) -> Params:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    pd = cfg.param_dtype
+    lead, ax = prefix, ("layers",) * len(prefix)
+    wi_cols = 2 * F if cfg.gated_mlp else F
+    return {
+        "ln": ParamSpec(lead + (D,), "float32", ax + ("embed",), init="zeros"),
+        "wi": ParamSpec(lead + (D, wi_cols), pd, ax + ("embed", "mlp")),
+        "wo": ParamSpec(lead + (F, D), pd, ax + ("mlp", "embed")),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    act = activation_fn(cfg.activation)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    hi = h @ p["wi"].astype(h.dtype)
+    if cfg.gated_mlp:
+        gate, up = jnp.split(hi, 2, axis=-1)
+        hi = act(gate) * up
+    else:
+        hi = act(hi)
+    out = hi @ p["wo"].astype(h.dtype)
+    out = shard_act(out, ("act_batch", "act_seq", "act_embed"))
+    out = checkpoint_name(out, "mlp_proj")
+    return x + out

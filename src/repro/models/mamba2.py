@@ -1,0 +1,274 @@
+"""Mamba2 block — SSD (state-space duality) with chunked scan.
+
+Projections are split per component (z / x / B / C / dt) so each carries a
+clean logical sharding axis (heads and d_inner over the ``model`` mesh axis;
+the SSD einsums are elementwise in heads, so TP inserts a single all-reduce
+at ``out_proj`` — Megatron-style).
+
+The chunked SSD follows the minimal algorithm of arXiv:2405.21060 §6: an
+intra-chunk (quadratic-in-Q) term plus an inter-chunk state recurrence,
+implemented as one ``lax.scan`` over chunks carrying the running state.
+``repro.kernels.ssd_scan`` provides the Pallas TPU kernel for the same math;
+this module is also its oracle (``ref.py`` delegates here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.sharding import ParamSpec
+from repro.models.layers import rms_norm
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Param specs
+# --------------------------------------------------------------------------
+
+def mamba_specs(cfg: ModelConfig, prefix: Tuple[int, ...] = ()) -> Params:
+    ssm = cfg.ssm
+    assert ssm is not None
+    D = cfg.d_model
+    din = ssm.d_inner(D)
+    nh = ssm.n_heads(D)
+    N, K = ssm.d_state, ssm.d_conv
+    pd = cfg.param_dtype
+    lead, ax = prefix, ("layers",) * len(prefix)
+    return {
+        "ln": ParamSpec(lead + (D,), "float32", ax + ("embed",), init="zeros"),
+        "wz": ParamSpec(lead + (D, din), pd, ax + ("embed", "mamba_inner")),
+        "wx": ParamSpec(lead + (D, din), pd, ax + ("embed", "mamba_inner")),
+        "wB": ParamSpec(lead + (D, N), pd, ax + ("embed", "mamba_state")),
+        "wC": ParamSpec(lead + (D, N), pd, ax + ("embed", "mamba_state")),
+        "wdt": ParamSpec(lead + (D, nh), pd, ax + ("embed", "mamba_heads")),
+        "conv_x": ParamSpec(lead + (K, din), pd, ax + ("conv_width", "mamba_inner"),
+                            scale=0.5),
+        "conv_B": ParamSpec(lead + (K, N), pd, ax + ("conv_width", "mamba_state"),
+                            scale=0.5),
+        "conv_C": ParamSpec(lead + (K, N), pd, ax + ("conv_width", "mamba_state"),
+                            scale=0.5),
+        "A_log": ParamSpec(lead + (nh,), "float32", ax + ("mamba_heads",),
+                           init="zeros"),
+        "D": ParamSpec(lead + (nh,), "float32", ax + ("mamba_heads",),
+                       init="ones"),
+        "dt_bias": ParamSpec(lead + (nh,), "float32", ax + ("mamba_heads",),
+                             init="zeros"),
+        "gate_ln": ParamSpec(lead + (din,), "float32", ax + ("mamba_inner",),
+                             init="zeros"),
+        "out": ParamSpec(lead + (din, D), pd, ax + ("mamba_inner", "embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# Depthwise causal conv (width K, no dilation)
+# --------------------------------------------------------------------------
+
+def causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (B,S,Ch), w: (K,Ch) -> (B,S,Ch); causal, zero left-pad."""
+    K = w.shape[0]
+    out = u * w[K - 1]
+    for k in range(K - 1):
+        shift = K - 1 - k
+        shifted = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[k]
+    return out
+
+
+def causal_conv_step(
+    u_new: jax.Array, conv_state: jax.Array, w: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One decode step.  u_new: (B,Ch); conv_state: (B,K-1,Ch)."""
+    K = w.shape[0]
+    hist = jnp.concatenate([conv_state, u_new[:, None]], axis=1)  # (B,K,Ch)
+    out = jnp.einsum("bkc,kc->bc", hist, w)
+    return out, hist[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan
+# --------------------------------------------------------------------------
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular segment sums.
+
+    out[..., l, s] = sum_{j=s+1..l} dA[..., j]   (l >= s), -inf above diag.
+    """
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array,
+    B_: jax.Array, C_: jax.Array, chunk: int,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: (B,S,H,P) head values; dt: (B,S,H) (post-softplus, >0);
+    A: (H,) negative; B_, C_: (B,S,N) (single SSD group, broadcast over H).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bb, S, H, Pd = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    f32 = jnp.float32
+
+    xdt = (x.astype(f32) * dt.astype(f32)[..., None])
+    dA = dt.astype(f32) * A.astype(f32)                          # (B,S,H)
+
+    xc = xdt.reshape(Bb, nc, chunk, H, Pd)
+    dAc = dA.reshape(Bb, nc, chunk, H)
+    Bc = B_.astype(f32).reshape(Bb, nc, chunk, N)
+    Cc = C_.astype(f32).reshape(Bb, nc, chunk, N)
+
+    state0 = (jnp.zeros((Bb, H, Pd, N), f32) if init_state is None
+              else init_state.astype(f32))
+
+    def chunk_step(state, inp):
+        xk, dAk, Bk, Ck = inp          # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        cs = jnp.cumsum(dAk, axis=1)                             # (B,Q,H)
+        # intra-chunk
+        L = jnp.exp(_segsum(dAk.transpose(0, 2, 1)))             # (B,H,Q,Q)
+        G = jnp.einsum("bln,bsn->bls", Ck, Bk)                   # (B,Q,Q)
+        Y = jnp.einsum("bls,bhls,bshp->blhp", G, L, xk)
+        # contribution of incoming state
+        Y = Y + jnp.einsum("bln,bhpn,blh->blhp", Ck, state, jnp.exp(cs))
+        # state update
+        decay = jnp.exp(cs[:, -1:, :] - cs)                      # (B,Q,H)
+        new_state = state * jnp.exp(cs[:, -1])[..., None, None]  # (B,H,1,1)
+        new_state = new_state + jnp.einsum("bsn,bsh,bshp->bhpn", Bk, decay, xk)
+        return new_state, Y
+
+    inputs = (xc.transpose(1, 0, 2, 3, 4), dAc.transpose(1, 0, 2, 3),
+              Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3))
+    final_state, Ys = lax.scan(chunk_step, state0, inputs)
+    y = Ys.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, Pd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    x: jax.Array, dt: jax.Array, A: jax.Array,
+    B_: jax.Array, C_: jax.Array, state: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSD recurrence.  x:(B,H,P) dt:(B,H) B_,C_:(B,N)
+    state:(B,H,P,N) -> (y:(B,H,P), new_state)."""
+    f32 = jnp.float32
+    dA = jnp.exp(dt.astype(f32) * A.astype(f32))                 # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(f32), x.astype(f32),
+                     B_.astype(f32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_.astype(f32))
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Block apply
+# --------------------------------------------------------------------------
+
+def make_mamba_cache(cfg: ModelConfig, batch: int) -> Params:
+    ssm = cfg.ssm
+    din = ssm.d_inner(cfg.d_model)
+    nh = ssm.n_heads(cfg.d_model)
+    return {
+        "state": jnp.zeros((batch, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, ssm.d_conv - 1, din), jnp.bfloat16),
+        "conv_B": jnp.zeros((batch, ssm.d_conv - 1, ssm.d_state), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch, ssm.d_conv - 1, ssm.d_state), jnp.bfloat16),
+    }
+
+
+def _project(cfg: ModelConfig, p: Params, h: jax.Array):
+    z = h @ p["wz"].astype(h.dtype)
+    xv = h @ p["wx"].astype(h.dtype)
+    Bv = h @ p["wB"].astype(h.dtype)
+    Cv = h @ p["wC"].astype(h.dtype)
+    dt = h @ p["wdt"].astype(h.dtype)
+    return z, xv, Bv, Cv, dt
+
+
+def mamba_apply(
+    cfg: ModelConfig, p: Params, x: jax.Array, *,
+    cache: Optional[Params] = None, ssd_impl: str = "auto",
+    return_state: bool = False,
+):
+    """Mamba2 block with pre-norm + residual.
+
+    Full mode (train/prefill): cache None; optionally return final SSD/conv
+    states for cache construction.  Decode mode: one token, cache updated.
+    """
+    ssm = cfg.ssm
+    nh = ssm.n_heads(cfg.d_model)
+    Pd = ssm.head_dim
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    if cache is None:
+        B, S, _ = x.shape
+        z, xv, Bv, Cv, dt = _project(cfg, p, h)
+        xv = jax.nn.silu(causal_conv(xv, p["conv_x"].astype(h.dtype)))
+        Bv = jax.nn.silu(causal_conv(Bv, p["conv_B"].astype(h.dtype)))
+        Cv = jax.nn.silu(causal_conv(Cv, p["conv_C"].astype(h.dtype)))
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        xh = xv.reshape(B, S, nh, Pd)
+        if ssd_impl == "pallas":
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, fstate = ssd_ops.ssd(xh, dt, A, Bv, Cv, chunk=ssm.chunk)
+        else:
+            y, fstate = ssd_chunked(xh, dt, A, Bv, Cv, chunk=ssm.chunk)
+        y = y + xh * p["D"][:, None].astype(y.dtype)
+        y = y.reshape(B, S, nh * Pd)
+        y = rms_norm(y * jax.nn.silu(z), p["gate_ln"], cfg.norm_eps)
+        out = x + y @ p["out"].astype(h.dtype)
+        if return_state:
+            new_cache = {
+                "state": fstate,
+                "conv_x": _tail_conv_inputs(h, p, "wx", "conv_x", ssm),
+                "conv_B": _tail_conv_inputs(h, p, "wB", "conv_B", ssm),
+                "conv_C": _tail_conv_inputs(h, p, "wC", "conv_C", ssm),
+            }
+            return out, new_cache
+        return out, None
+
+    # ---- decode ------------------------------------------------------------
+    B = x.shape[0]
+    h1 = h[:, 0]                                                  # (B,D)
+    z = h1 @ p["wz"].astype(h1.dtype)
+    xv = h1 @ p["wx"].astype(h1.dtype)
+    Bv = h1 @ p["wB"].astype(h1.dtype)
+    Cv = h1 @ p["wC"].astype(h1.dtype)
+    dt = h1 @ p["wdt"].astype(h1.dtype)
+    xv, cx = causal_conv_step(xv, cache["conv_x"].astype(h1.dtype),
+                              p["conv_x"].astype(h1.dtype))
+    Bv, cB = causal_conv_step(Bv, cache["conv_B"].astype(h1.dtype),
+                              p["conv_B"].astype(h1.dtype))
+    Cv, cC = causal_conv_step(Cv, cache["conv_C"].astype(h1.dtype),
+                              p["conv_C"].astype(h1.dtype))
+    xv, Bv, Cv = jax.nn.silu(xv), jax.nn.silu(Bv), jax.nn.silu(Cv)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, new_state = ssd_decode_step(
+        xv.reshape(B, nh, Pd), dt, A, Bv, Cv, cache["state"])
+    y = y + xv.reshape(B, nh, Pd) * p["D"][:, None].astype(y.dtype)
+    y = y.reshape(B, nh * Pd)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_ln"], cfg.norm_eps)
+    out = x + (y @ p["out"].astype(h1.dtype))[:, None]
+    new_cache = {"state": new_state,
+                 "conv_x": cx.astype(cache["conv_x"].dtype),
+                 "conv_B": cB.astype(cache["conv_B"].dtype),
+                 "conv_C": cC.astype(cache["conv_C"].dtype)}
+    return out, new_cache
+
+
+def _tail_conv_inputs(h: jax.Array, p: Params, wname: str, cname: str,
+                      ssm: SSMConfig) -> jax.Array:
+    """Last (K-1) pre-conv inputs of the sequence — decode conv state."""
+    u = h[:, -(ssm.d_conv - 1):] @ p[wname].astype(h.dtype)
+    return u.astype(jnp.bfloat16)

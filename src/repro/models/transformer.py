@@ -1,0 +1,330 @@
+"""Decoder-LM assembly: dense / MoE / SSM / hybrid, one code path.
+
+Layers are organized in *repeating groups* (``cfg.layer_kinds()``) and the
+group stack runs under ``lax.scan`` with stacked parameters — this keeps the
+HLO small (fast XLA-CPU compiles for the 512-device dry-run) and matches the
+standard TPU production pattern (MaxText).  Remat wraps the group body.
+
+Zamba2's shared attention block is a closure constant inside the scan (one
+parameter set reused at every application — gradients accumulate across
+iterations automatically).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard_act
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+
+Params = Dict[str, Any]
+
+_ACT = ("act_batch", "act_seq", "act_embed")
+
+
+def _logits_from_hidden(cfg: ModelConfig, h: jax.Array,
+                        emb: jax.Array) -> jax.Array:
+    """Unembedding with vocab-pad masking + sharding constraints."""
+    logits = jnp.einsum("bsd,vd->bsv", h, emb.astype(h.dtype))
+    logits = shard_act(logits, ("act_batch", "act_seq", "act_vocab"))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, jnp.asarray(-1e9, logits.dtype), logits)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# Param specs
+# --------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, kind: str,
+                 prefix: Tuple[int, ...]) -> Params:
+    if kind == "mamba":
+        return M.mamba_specs(cfg, prefix)
+    if kind == "attn" and cfg.shared_attn:
+        return {}  # parameters live in the top-level shared_attn entry
+    block: Params = {"attn": L.attn_specs(cfg, prefix)}
+    if cfg.moe is not None:
+        block["moe"] = MOE.moe_specs(cfg, prefix)
+    else:
+        block["mlp"] = L.mlp_specs(cfg, prefix=prefix)
+    return block
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    V, D = cfg.vocab_size, cfg.d_model
+    kinds = cfg.layer_kinds()
+    ng = cfg.n_groups
+    specs: Params = {
+        "embed": ParamSpec((cfg.padded_vocab, D), cfg.param_dtype,
+                           ("vocab", "embed")),
+        "final_ln": ParamSpec((D,), "float32", ("embed",), init="zeros"),
+    }
+    stacked_prefix = (ng,) if ng > 1 else ()
+    specs["groups"] = {
+        f"l{i}": _block_specs(cfg, kind, stacked_prefix)
+        for i, kind in enumerate(kinds)
+    }
+    tail_kinds = kinds[: cfg.n_tail_layers]
+    if tail_kinds:
+        specs["tail"] = {
+            f"l{i}": _block_specs(cfg, kind, ()) for i, kind in enumerate(tail_kinds)
+        }
+    if cfg.shared_attn:
+        specs["shared_attn"] = {
+            "attn": L.attn_specs(cfg, ()),
+            "mlp": L.mlp_specs(cfg, prefix=()),
+        }
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _layer_window(cfg: ModelConfig, kind: str) -> int:
+    return cfg.local_window if kind == "local" else 0
+
+
+def _apply_block_full(
+    cfg: ModelConfig, kind: str, bp: Params, shared: Optional[Params],
+    h: jax.Array, positions: jax.Array, *,
+    attn_impl: str, ssd_impl: str, want_cache: bool,
+):
+    """One layer in full (train/prefill) mode.  Returns (h, aux, cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind == "mamba":
+        h, cache = M.mamba_apply(cfg, bp, h, ssd_impl=ssd_impl,
+                                 return_state=want_cache)
+    elif kind == "attn" and cfg.shared_attn:
+        h, kv = L.attn_apply(cfg, shared["attn"], h, positions=positions,
+                             attn_impl=attn_impl, return_kv=want_cache)
+        h = L.mlp_apply(cfg, shared["mlp"], h)
+        cache = kv
+    else:
+        window = _layer_window(cfg, kind)
+        h, kv = L.attn_apply(cfg, bp["attn"], h, positions=positions,
+                             window=window, attn_impl=attn_impl,
+                             return_kv=want_cache)
+        cache = kv
+        if "moe" in bp:
+            h, aux = MOE.moe_apply(cfg, bp["moe"], h)
+        else:
+            h = L.mlp_apply(cfg, bp["mlp"], h)
+    return h, aux, cache
+
+
+def _kv_to_ring(cfg: ModelConfig, kind: str, kv, cache_len: int):
+    """Convert prefill K/V into the decode ring-buffer cache layout."""
+    if kv is None:
+        return None
+    k, v = kv
+    S = k.shape[1]
+    window = _layer_window(cfg, kind)
+    length = min(window, cache_len) if window else cache_len
+    pos = jnp.arange(S)
+    if S >= length:
+        k_r, v_r = k[:, S - length:], v[:, S - length:]
+        p_r = pos[S - length:]
+        shift = (S - length) % length
+        k_r = jnp.roll(k_r, shift, axis=1)
+        v_r = jnp.roll(v_r, shift, axis=1)
+        p_r = jnp.roll(p_r, shift, axis=0)
+    else:
+        padlen = length - S
+        k_r = jnp.pad(k, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        v_r = jnp.pad(v, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+        p_r = jnp.concatenate([pos, jnp.full((padlen,), -1, pos.dtype)])
+    return {"k": k_r.astype(jnp.bfloat16), "v": v_r.astype(jnp.bfloat16),
+            "pos": p_r.astype(jnp.int32)}
+
+
+def forward(
+    cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+    extra_embeds: Optional[jax.Array] = None,
+    attn_impl: str = "auto", ssd_impl: str = "auto",
+    want_caches: bool = False, cache_len: int = 0,
+):
+    """Full forward.  Returns (logits, aux_loss, caches|None).
+
+    ``extra_embeds`` (B, P, D): modality-stub embeddings prepended to the
+    token embeddings (vlm patches).  ``want_caches`` additionally returns
+    decode caches of length ``cache_len`` (defaults to sequence length).
+    """
+    kinds = cfg.layer_kinds()
+    emb = params["embed"]
+    h = jnp.take(emb, tokens, axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+    n_extra = 0
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+        n_extra = extra_embeds.shape[1]
+    h = shard_act(h, _ACT)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if not cache_len:
+        cache_len = S
+    shared = params.get("shared_attn")
+
+    def group_fn(h, gp):
+        aux_t = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(kinds):
+            h, aux, cache = _apply_block_full(
+                cfg, kind, gp[f"l{i}"], shared, h, positions,
+                attn_impl=attn_impl, ssd_impl=ssd_impl,
+                want_cache=want_caches)
+            h = shard_act(h, _ACT)
+            aux_t = aux_t + aux
+            if want_caches:
+                if kind in ("global", "local", "attn"):
+                    cache = _kv_to_ring(cfg, kind, cache, cache_len)
+                caches[f"l{i}"] = cache
+        return h, (aux_t, caches) if want_caches else (aux_t, None)
+
+    body = group_fn
+    if cfg.remat:
+        if cfg.remat_policy == "proj_outs":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "attn_proj", "mlp_proj")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        body = jax.checkpoint(group_fn, policy=policy)
+
+    if cfg.n_groups > 1:
+        h, (auxs, caches) = lax.scan(body, h, params["groups"])
+        aux_total = jnp.sum(auxs)
+    else:
+        h, (aux_total, caches) = body(h, params["groups"])
+
+    tail_caches = {}
+    if "tail" in params:
+        for i, kind in enumerate(kinds[: cfg.n_tail_layers]):
+            h, aux, cache = _apply_block_full(
+                cfg, kind, params["tail"][f"l{i}"], shared, h, positions,
+                attn_impl=attn_impl, ssd_impl=ssd_impl,
+                want_cache=want_caches)
+            aux_total = aux_total + aux
+            if want_caches:
+                if kind in ("global", "local", "attn"):
+                    cache = _kv_to_ring(cfg, kind, cache, cache_len)
+                tail_caches[f"l{i}"] = cache
+
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    if n_extra:
+        h = h[:, n_extra:]
+    h = shard_act(h, _ACT)
+    logits = _logits_from_hidden(cfg, h, emb)
+    all_caches = {"groups": caches, "tail": tail_caches} if want_caches else None
+    return logits, aux_total, all_caches
+
+
+# --------------------------------------------------------------------------
+# Decode (one token, ring-buffer caches)
+# --------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                recent_len: int = 0) -> Params:
+    """Zero-initialized decode caches (pos = -1 -> masked).
+
+    ``recent_len > 0`` switches full-length caches to the two-buffer layout
+    (read-only seq-shardable main + replicated recent ring — see
+    layers.make_cache); windowed local caches stay single small rings."""
+    kinds = cfg.layer_kinds()
+
+    def one(kind: str) -> Params:
+        if kind == "mamba":
+            return M.make_mamba_cache(cfg, batch)
+        window = _layer_window(cfg, kind)
+        length = min(window, cache_len) if window else cache_len
+        recent = recent_len if not window else 0
+        return L.make_cache(cfg, batch, length, recent=recent)
+
+    group_caches = {f"l{i}": one(kind) for i, kind in enumerate(kinds)}
+    if cfg.n_groups > 1:
+        group_caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_groups,) + x.shape).copy(),
+            group_caches)
+    tail = {f"l{i}": one(kind)
+            for i, kind in enumerate(kinds[: cfg.n_tail_layers])}
+    return {"groups": group_caches, "tail": tail}
+
+
+def _apply_block_decode(
+    cfg: ModelConfig, kind: str, bp: Params, shared: Optional[Params],
+    h: jax.Array, cache: Params, positions: jax.Array, cur_pos: jax.Array,
+):
+    if kind == "mamba":
+        return M.mamba_apply(cfg, bp, h, cache=cache)
+    if kind == "attn" and cfg.shared_attn:
+        h, new_cache = L.attn_apply(cfg, shared["attn"], h,
+                                    positions=positions, cache=cache,
+                                    cur_pos=cur_pos)
+        h = L.mlp_apply(cfg, shared["mlp"], h)
+        return h, new_cache
+    window = _layer_window(cfg, kind)
+    h, new_cache = L.attn_apply(cfg, bp["attn"], h, positions=positions,
+                                window=window, cache=cache, cur_pos=cur_pos)
+    if "moe" in bp:
+        h, _ = MOE.moe_apply(cfg, bp["moe"], h)
+    else:
+        h = L.mlp_apply(cfg, bp["mlp"], h)
+    return h, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig, params: Params, token: jax.Array,
+    caches: Params, cur_pos: jax.Array,
+):
+    """One decode step.  token: (B,1) int32; cur_pos: () int32 — the position
+    being written.  Returns (logits (B,1,V), new caches)."""
+    kinds = cfg.layer_kinds()
+    emb = params["embed"]
+    h = jnp.take(emb, token, axis=0).astype(cfg.dtype)
+    if cfg.tie_embeddings:
+        h = h * math.sqrt(cfg.d_model)
+    h = shard_act(h, _ACT)
+    B = h.shape[0]
+    positions = jnp.broadcast_to(cur_pos[None], (B, 1))
+    shared = params.get("shared_attn")
+
+    def group_fn(h, xs):
+        gp, gcache = xs
+        new_caches = {}
+        for i, kind in enumerate(kinds):
+            h, nc = _apply_block_decode(
+                cfg, kind, gp[f"l{i}"], shared, h, gcache[f"l{i}"],
+                positions, cur_pos)
+            new_caches[f"l{i}"] = nc
+        return h, new_caches
+
+    if cfg.n_groups > 1:
+        h, new_group_caches = lax.scan(
+            group_fn, h, (params["groups"], caches["groups"]))
+    else:
+        h, new_group_caches = group_fn(h, (params["groups"], caches["groups"]))
+
+    new_tail = {}
+    for i, kind in enumerate(kinds[: cfg.n_tail_layers]):
+        h, nc = _apply_block_decode(
+            cfg, kind, params["tail"][f"l{i}"], shared, h,
+            caches["tail"][f"l{i}"], positions, cur_pos)
+        new_tail[f"l{i}"] = nc
+
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    h = shard_act(h, _ACT)
+    logits = _logits_from_hidden(cfg, h, emb)
+    return logits, {"groups": new_group_caches, "tail": new_tail}

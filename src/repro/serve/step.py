@@ -1,0 +1,43 @@
+"""Serving steps: prefill (builds caches) and decode (one token)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+Params = Dict[str, Any]
+
+
+def make_prefill_step(cfg: ModelConfig, *, cache_len: int = 0,
+                      attn_impl: str = "auto",
+                      ssd_impl: str = "auto") -> Callable:
+    def prefill(params: Params, batch: Dict[str, jax.Array]):
+        logits, _, caches = api.forward_logits(
+            cfg, params, batch, attn_impl=attn_impl, ssd_impl=ssd_impl,
+            want_caches=True, cache_len=cache_len)
+        return logits[:, -1:], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params: Params, token: jax.Array, caches: Params,
+               cur_pos: jax.Array):
+        return api.decode_step(cfg, params, token, caches, cur_pos)
+    return decode
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_token(logits: jax.Array, key: jax.Array,
+                 temperature: float = 1.0) -> jax.Array:
+    if temperature == 0.0:
+        return greedy_sample(logits)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

@@ -1,0 +1,113 @@
+"""Training step: loss, grad, optimizer update — with microbatch gradient
+accumulation (``lax.scan``) so compute of microbatch k+1 overlaps the
+reduction of microbatch k under XLA's latency-hiding scheduler on TPU."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act
+from repro.models import api
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+Params = Dict[str, Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over positions with label >= 0.
+
+    Written to stay sharded when the vocab dim is model-parallel: the picked
+    logit is a one-hot contraction (local partial + all-reduce under GSPMD)
+    and logsumexp reduces the sharded dim — never a gather over a sharded
+    axis (which GSPMD would resolve by replicating the logits)."""
+    V = logits.shape[-1]
+    lab = jnp.maximum(labels, 0)
+    m = jax.lax.stop_gradient(logits.max(axis=-1))
+    shifted = logits - m[..., None].astype(logits.dtype)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1))
+    onehot = jax.nn.one_hot(lab, V, dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", shifted, onehot,
+                        preferred_element_type=jnp.float32)
+    ll = picked - lse
+    ll = shard_act(ll, ("act_batch", "act_seq"))
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(
+    cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+    attn_impl: str = "auto", ssd_impl: str = "auto",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _ = api.forward_logits(
+        cfg, params, batch, attn_impl=attn_impl, ssd_impl=ssd_impl)
+    ce = cross_entropy(logits, batch["labels"])
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    loss = ce + aux_w * aux
+    return loss, {"loss": ce, "aux_loss": aux}
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], k: int):
+    def resh(x):
+        return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+    return jax.tree_util.tree_map(resh, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+    microbatches: int = 1, attn_impl: str = "auto", ssd_impl: str = "auto",
+    grad_transform: Optional[Callable] = None,
+) -> Callable:
+    """Returns ``step(state, batch) -> (state, metrics)``.
+
+    ``grad_transform(grads) -> grads`` hook is where gradient compression
+    (int8 all-reduce with error feedback) plugs in — see
+    ``repro.distributed.compression``.
+    """
+    vg = jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, attn_impl=attn_impl,
+                             ssd_impl=ssd_impl), has_aux=True)
+
+    def step(state: Dict[str, Any], batch: Dict[str, jax.Array]):
+        params = state["params"]
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def acc_fn(carry, one):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, m), g = vg(params, one)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + m["loss"], aux_acc + m["aux_loss"]), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum, aux_sum), _ = lax.scan(
+                acc_fn, (g0, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / microbatches, grads)
+            metrics = {"loss": loss_sum / microbatches,
+                       "aux_loss": aux_sum / microbatches}
+        else:
+            (loss, metrics), grads = vg(params, batch)
+
+        if grad_transform is not None:
+            grads, state = grad_transform(grads, state)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"])
+        metrics.update(opt_metrics)
+        new_state = dict(state)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        return new_state, metrics
+
+    return step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     params: Params) -> Dict[str, Any]:
+    return {"params": params, "opt": init_opt_state(opt_cfg, params)}

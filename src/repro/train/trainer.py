@@ -1,0 +1,98 @@
+"""Production trainer: checkpoint/restart, preemption, stragglers,
+optional gradient compression — CPU-runnable on smoke configs and
+mesh-ready on TPU via the same sharding rules as the dry-run."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import pipeline_for_model
+from repro.distributed.compression import ef_int8_transform, init_error_state
+from repro.distributed.fault import PreemptionHandler, StragglerDetector
+from repro.distributed.sharding import init_params
+from repro.models import api
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    microbatches: int = 1
+    compress_grads: bool = False
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, tc: TrainerConfig):
+        self.model_cfg = model_cfg
+        self.tc = tc
+        self.pipeline = pipeline_for_model(
+            model_cfg, tc.global_batch, tc.seq_len, seed=tc.seed)
+        grad_transform = ef_int8_transform if tc.compress_grads else None
+        self._step_fn = jax.jit(make_train_step(
+            model_cfg, tc.opt, microbatches=tc.microbatches,
+            grad_transform=grad_transform))
+        self.ckpt = (Checkpointer(tc.ckpt_dir) if tc.ckpt_dir else None)
+        self.preemption = PreemptionHandler().install()
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------ api
+    def init_state(self) -> Dict[str, Any]:
+        params = init_params(api.param_specs(self.model_cfg),
+                             jax.random.key(self.tc.seed))
+        state = init_train_state(self.model_cfg, self.tc.opt, params)
+        if self.tc.compress_grads:
+            state["ef_err"] = init_error_state(params)
+        return state
+
+    def restore_or_init(self):
+        state = self.init_state()
+        start = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            state, start = self.ckpt.restore(state)
+        return state, start
+
+    def run(self, state=None, start_step: Optional[int] = None):
+        if state is None:
+            state, start_step = self.restore_or_init()
+        start_step = start_step or 0
+        step = start_step
+        for step in range(start_step, self.tc.steps):
+            t0 = time.time()
+            batch = self.pipeline.batch_at(step)      # skip-ahead-safe
+            state, metrics = self._step_fn(state, batch)
+            dt = time.time() - t0
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=step, step_time_s=dt)
+            self.history.append(rec)
+            if self.tc.log_every and step % self.tc.log_every == 0:
+                print(f"[train] step={step} loss={rec['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if self.ckpt and (step + 1) % self.tc.ckpt_every == 0:
+                self.ckpt.save(state, step + 1)
+            if self.preemption.preempted():
+                if self.ckpt:
+                    self.ckpt.save(state, step + 1, block=True)
+                print(f"[train] preempted at step {step + 1}; "
+                      f"checkpointed and exiting")
+                return state, step + 1
+        if self.ckpt:
+            self.ckpt.save(state, self.tc.steps, block=True)
+            self.ckpt.wait()
+        return state, self.tc.steps
+
+    def losses(self) -> np.ndarray:
+        return np.array([h["loss"] for h in self.history])

@@ -1,0 +1,80 @@
+"""TPU capacity planner on synthetic dry-run costs (no file dependency)."""
+import math
+
+import pytest
+
+from repro.core.capacity import (
+    CellCost,
+    ServingClass,
+    SliceType,
+    TPUCapacityPlanner,
+    TrainClass,
+    kv_bytes_per_token,
+    slice_slots,
+    step_time_ms,
+)
+
+# synthetic-but-plausible per-device costs on the 256-chip reference mesh
+COSTS = {
+    ("granite-3-2b", "train_4k"): CellCost(4.5e12, 6.0e11, 2.0e7),
+    ("granite-3-2b", "prefill_32k"): CellCost(1.2e12, 2.5e11, 1.0e7),
+    ("granite-3-2b", "decode_32k"): CellCost(2.0e9, 3.0e9, 5.0e6),
+    ("mamba2-780m", "decode_32k"): CellCost(6.0e6, 2.0e7, 1.0e5),
+}
+
+
+def planner():
+    return TPUCapacityPlanner(COSTS)
+
+
+def test_step_time_scales_with_chips():
+    c = COSTS[("granite-3-2b", "train_4k")]
+    t16 = step_time_ms(c, SliceType("v5e-16", 16))
+    t64 = step_time_ms(c, SliceType("v5e-64", 64))
+    assert t16 > t64
+    assert t16 / t64 == pytest.approx(4.0, rel=0.1)
+
+
+def test_kv_bytes_families():
+    assert kv_bytes_per_token("mamba2-780m") == 0.0         # SSM: O(1) state
+    dense = kv_bytes_per_token("granite-3-2b")
+    assert dense > 0
+    local = kv_bytes_per_token("gemma3-27b")                # mostly windowed
+    full_equiv = (62 * 2 * 16 * 128 * 2.0)
+    assert local < full_equiv / 3                           # only globals pay
+
+
+def test_slots_shrink_with_longer_prompts():
+    short = ServingClass(name="s", arch="granite-3-2b", prompt_len=1024)
+    long = ServingClass(name="l", arch="granite-3-2b", prompt_len=16384)
+    slc = SliceType("v5e-64", 64)
+    assert slice_slots(long, slc) < slice_slots(short, slc)
+
+
+def test_training_plan_deadline_binding():
+    pl = planner()
+    sols = pl.plan_training([TrainClass(name="t", arch="granite-3-2b",
+                                        steps=200_000, deadline_h=24.0)])
+    sol = sols["t"]
+    assert sol.feasible
+    assert sol.reserved + sol.spot == sol.nu
+    # tightening the deadline can only cost more
+    sols2 = pl.plan_training([TrainClass(name="t", arch="granite-3-2b",
+                                         steps=200_000, deadline_h=12.0)])
+    assert sols2["t"].cost_per_h >= sol.cost_per_h - 1e-9
+
+
+def test_serving_plan_analytic():
+    pl = planner()
+    cls = ServingClass(name="s", arch="granite-3-2b", prompt_len=2048,
+                       gen_len=128, h_sessions=32, think_ms=5_000,
+                       deadline_ms=20_000)
+    sols = pl.plan_serving([cls], use_qn=False)
+    sol = sols["s"]
+    assert sol.feasible and sol.nu >= 1
+    # more sessions -> at least as expensive
+    cls2 = ServingClass(name="s", arch="granite-3-2b", prompt_len=2048,
+                        gen_len=128, h_sessions=256, think_ms=5_000,
+                        deadline_ms=20_000)
+    sols2 = pl.plan_serving([cls2], use_qn=False)
+    assert sols2["s"].cost_per_h >= sol.cost_per_h - 1e-9

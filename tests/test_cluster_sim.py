@@ -1,0 +1,67 @@
+"""Detailed trace-replay cluster simulator (the 'measured system')."""
+import numpy as np
+import pytest
+
+from repro.core.cluster_sim import (
+    WorkloadSpec,
+    profile_from_runs,
+    replayer_lists,
+    sample_task_durations,
+    simulate_cluster,
+)
+
+SPEC = WorkloadSpec(name="t", n_map=50, n_reduce=10, map_ms=2000,
+                    reduce_ms=1000, cv=0.3, startup_ms=100,
+                    shuffle_first_ms=200, straggler_p=0.02)
+
+
+def test_response_scales_down_with_slots():
+    # 50 maps on 20 vs 40 slots: 2.5 waves vs 1.25 — speedup is bounded by
+    # the max-task floor (ARIA upper-bound term), so expect 1.2-2.2x, not 2x
+    t20, _ = simulate_cluster(SPEC, slots=20, h_users=1, think_ms=5000,
+                              max_jobs=20, warmup_jobs=2, seed=0)
+    t40, _ = simulate_cluster(SPEC, slots=40, h_users=1, think_ms=5000,
+                              max_jobs=20, warmup_jobs=2, seed=0)
+    assert t40 < t20
+    assert 1.15 < t20 / t40 < 2.3
+
+
+def test_more_users_never_faster():
+    t1, _ = simulate_cluster(SPEC, slots=20, h_users=1, think_ms=2000,
+                             max_jobs=25, warmup_jobs=3, seed=1)
+    t4, _ = simulate_cluster(SPEC, slots=20, h_users=4, think_ms=2000,
+                             max_jobs=25, warmup_jobs=3, seed=1)
+    assert t4 > t1 * 0.95
+
+
+def test_speed_scales_durations():
+    rng = np.random.default_rng(0)
+    m1, r1 = sample_task_durations(SPEC, rng, speed=1.0)
+    rng = np.random.default_rng(0)
+    m2, r2 = sample_task_durations(SPEC, rng, speed=2.0)
+    np.testing.assert_allclose(m1, m2 * 2.0, rtol=1e-6)
+
+
+def test_profile_extraction_statistics():
+    prof = profile_from_runs(SPEC, runs=30, slots=20, seed=2)
+    assert prof.n_map == SPEC.n_map and prof.n_reduce == SPEC.n_reduce
+    # lognormal(median=2000, cv=.3) + startup 100 + straggler tail
+    assert 2000 < prof.m_avg < 2600
+    assert prof.m_max > prof.m_avg * 1.8
+
+
+def test_replayer_lists_match_profile():
+    prof = profile_from_runs(SPEC, runs=20, slots=20, seed=3)
+    ms, rs = replayer_lists(SPEC, runs=20, slots=20, seed=3)
+    assert abs(ms.mean() - prof.m_avg) / prof.m_avg < 0.05
+    assert ms.dtype == np.float32
+
+
+def test_conservation_throughput_bound():
+    # measured throughput can never exceed slots / per-job work
+    mean, jobs = simulate_cluster(SPEC, slots=10, h_users=8, think_ms=100,
+                                  max_jobs=40, warmup_jobs=5, seed=4)
+    per_job_work = SPEC.n_map * 2100 + SPEC.n_reduce * 1100   # ~core-ms
+    span = max(j.finish for j in jobs) - min(j.submit for j in jobs)
+    throughput = len(jobs) / span
+    assert throughput * per_job_work <= 10 * 1.15             # 15% slack

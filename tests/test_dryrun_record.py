@@ -1,0 +1,66 @@
+"""Validate the committed dry-run record: every supported (arch x shape)
+cell compiled on BOTH meshes with sane roofline raw terms.  Skipped when
+the record has not been generated yet (run ``python -m repro.launch.dryrun``)."""
+import json
+import os
+
+import pytest
+
+from repro.configs.registry import all_cells
+
+RECORD = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(RECORD), reason="dry-run record not generated")
+
+
+def _records():
+    return json.loads(open(RECORD).read())
+
+
+def test_every_supported_cell_compiled_on_both_meshes():
+    recs = {(r["arch"], r["shape"], r["mesh"]): r for r in _records()}
+    missing, failed = [], []
+    for arch, shape, ok, reason in all_cells(include_skipped=True):
+        for mesh in ("16x16", "2x16x16"):
+            r = recs.get((arch, shape, mesh))
+            if not ok:
+                continue
+            if r is None:
+                missing.append((arch, shape, mesh))
+            elif "error" in r:
+                failed.append((arch, shape, mesh, r["error"][:100]))
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"
+
+
+def test_cell_counts():
+    recs = _records()
+    ok = [r for r in recs if r.get("supported") and "error" not in r]
+    skipped = [r for r in recs if not r.get("supported")]
+    assert len(ok) == 66                 # 33 supported cells x 2 meshes
+    assert len(skipped) == 14            # 7 long_500k skips x 2 meshes
+
+
+def test_roofline_terms_sane():
+    for r in _records():
+        if not r.get("supported") or "error" in r:
+            continue
+        ca = r["cost_analysis"]
+        assert ca["flops"] > 0, r["arch"]
+        assert ca["bytes_accessed"] > 0
+        assert sum(r["collective_bytes"].values()) >= 0
+        assert r["compile_s"] < 600
+
+
+def test_multipod_shards_the_pod_axis():
+    """The 512-chip mesh must not blow up per-device memory vs single pod."""
+    recs = {(r["arch"], r["shape"], r["mesh"]): r for r in _records()}
+    for (arch, shape, mesh), r in recs.items():
+        if mesh != "2x16x16" or "error" in r or not r.get("supported"):
+            continue
+        single = recs.get((arch, shape, "16x16"))
+        if single and "input_bytes_per_device" in single:
+            assert (r["input_bytes_per_device"]
+                    <= single["input_bytes_per_device"] * 1.05), (arch, shape)

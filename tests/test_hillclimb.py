@@ -1,0 +1,44 @@
+"""Algorithm 1: convergence to the evaluator's optimum, both branches."""
+import pytest
+
+from repro.core.hillclimb import hill_climb, optimize_class
+from repro.core.milp import initial_solution
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+
+VM = VMType(name="vm", cores=8, sigma=0.05, pi=0.20)
+PROF = JobProfile(n_map=64, n_reduce=8, m_avg=1000, m_max=2000,
+                  r_avg=500, r_max=1000)
+CLS = ApplicationClass(name="c0", h_users=4, think_ms=10_000,
+                       deadline_ms=30_000, eta=0.25,
+                       profiles={"vm": PROF, "_ref": PROF})
+
+
+def analytic_eval(cls, vm, nu):
+    # deterministic toy evaluator: T = K / nu  (feasible iff nu >= K/D)
+    return 240_000.0 / nu
+
+
+def test_decrement_branch_finds_boundary():
+    sol = optimize_class(CLS, VM, 30, analytic_eval)   # start feasible
+    assert sol.nu == 8 and sol.feasible                # 240000/8 = 30000 <= D
+    assert sol.predicted_ms <= CLS.deadline_ms
+
+
+def test_increment_branch_restores_feasibility():
+    sol = optimize_class(CLS, VM, 2, analytic_eval)    # start infeasible
+    assert sol.nu == 8 and sol.feasible
+
+
+def test_mix_reoptimized_at_every_move():
+    sol = optimize_class(CLS, VM, 8, analytic_eval)
+    assert sol.spot == int(0.25 * sol.nu)
+    assert sol.reserved + sol.spot == sol.nu
+
+
+def test_full_pipeline_with_initial_solution():
+    prob = Problem(classes=[CLS], vm_types=[VM])
+    init = initial_solution(prob)
+    assert init["c0"].feasible
+    sols, traces = hill_climb(prob, init, analytic_eval, parallel=False)
+    assert sols["c0"].nu == 8
+    assert traces["c0"].evals >= 1

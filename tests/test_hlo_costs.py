@@ -1,0 +1,75 @@
+"""Trip-count-aware HLO parser vs programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_costs import parse_hlo_costs
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 256), jnp.float32)
+    txt = _compiled_text(lambda a, b: a @ b, a, b)
+    c = parse_hlo_costs(txt)
+    assert c.flops == pytest.approx(2 * 64 * 256 * 128, rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(a):
+        def body(x, _):
+            return x @ a, None
+        x, _ = jax.lax.scan(body, a, None, length=17)
+        return x
+
+    c = parse_hlo_costs(_compiled_text(f, a))
+    expected = 17 * 2 * 64 * 64 * 64
+    assert c.flops == pytest.approx(expected, rel=0.05)
+    assert 17 in c.trip_counts.values()
+
+
+def test_nested_scans_multiply():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def f(a):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ a, None
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+        x, _ = jax.lax.scan(outer, a, None, length=5)
+        return x
+
+    c = parse_hlo_costs(_compiled_text(f, a))
+    expected = 5 * 3 * 2 * 32 * 32 * 32
+    assert c.flops == pytest.approx(expected, rel=0.05)
+
+
+def test_batched_dot_contraction_dims():
+    a = jnp.zeros((4, 16, 32), jnp.float32)
+    b = jnp.zeros((4, 32, 8), jnp.float32)
+    txt = _compiled_text(lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b)
+    c = parse_hlo_costs(txt)
+    assert c.flops == pytest.approx(2 * 4 * 16 * 8 * 32, rel=0.01)
+
+
+def test_grad_of_scan_counts_both_passes():
+    a = jnp.ones((32, 32), jnp.float32) * 0.01
+
+    def loss(a):
+        def body(x, _):
+            return x @ a, None
+        x, _ = jax.lax.scan(body, a, None, length=8)
+        return (x ** 2).sum()
+
+    c = parse_hlo_costs(_compiled_text(jax.grad(loss), a))
+    one_dot = 2 * 32 ** 3
+    # fwd 8 dots + bwd >= 16 dots (two matmuls per iteration)
+    assert c.flops >= 23 * one_dot
+    assert c.flops <= 50 * one_dot

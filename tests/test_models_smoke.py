@@ -1,0 +1,94 @@
+"""Per-arch smoke tests: reduced configs, one train step + prefill +
+decode on CPU, asserting shapes and finiteness (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.distributed.sharding import init_params, param_count
+from repro.models import api
+from repro.optim.adamw import AdamWConfig
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32)}
+    if cfg.frontend == "patches":
+        batch["patches"] = jnp.ones((B, cfg.frontend_len, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.frontend == "frames":
+        batch["frames"] = jnp.ones((B, cfg.frontend_len, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    batch = _batch(cfg)
+
+    opt = AdamWConfig(total_steps=10, mode=cfg.optimizer_mode)
+    state = init_train_state(cfg, opt, params)
+    step = jax.jit(make_train_step(cfg, opt))
+    state, m = step(state, batch)
+    assert jnp.isfinite(m["loss"]), (arch, m)
+
+    pf = jax.jit(make_prefill_step(cfg, cache_len=S))
+    infer = {k: v for k, v in batch.items() if k != "labels"}
+    logits_last, caches = pf(params, infer)
+    assert logits_last.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits_last.astype(jnp.float32))))
+
+    dec = jax.jit(make_decode_step(cfg))
+    logits, caches = dec(params, jnp.ones((B, 1), jnp.int32), caches,
+                         jnp.array(S, jnp.int32))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_specs(arch):
+    """Full (non-reduced) configs must build abstract specs with plausible
+    parameter counts — exercised for real by the dry-run."""
+    cfg = get_config(arch)
+    n = param_count(api.param_specs(cfg))
+    expected = {
+        "llama4-scout-17b-a16e": (90e9, 130e9),
+        "qwen2-moe-a2.7b": (12e9, 20e9),
+        "mamba2-780m": (0.5e9, 1.1e9),
+        "gemma3-27b": (23e9, 32e9),
+        "nemotron-4-340b": (300e9, 380e9),
+        "granite-3-2b": (2.0e9, 3.2e9),
+        "stablelm-3b": (2.4e9, 3.6e9),
+        # weight-shared attention block (Zamba trick) keeps the unique
+        # parameter count below the nominal "7b" of the unshared equivalent
+        "zamba2-7b": (4.0e9, 9.0e9),
+        "phi-3-vision-4.2b": (3.3e9, 4.8e9),
+        "whisper-tiny": (25e6, 60e6),
+    }[arch]
+    assert expected[0] <= n <= expected[1], f"{arch}: {n/1e9:.2f}B params"
+
+
+def test_decode_matches_prefill_logits():
+    """Prefill then decode of the same token sequence must agree with a
+    longer prefill (cache correctness, dense arch)."""
+    cfg = get_smoke_config("granite-3-2b")
+    params = init_params(api.param_specs(cfg), jax.random.key(1))
+    toks = jax.random.randint(jax.random.key(2), (1, 9), 1, cfg.vocab_size)
+    # full forward logits at position 8 (predicting token 9)
+    logits_full, _, _ = api.forward_logits(cfg, params,
+                                           {"tokens": toks})
+    # prefill 8 tokens, then decode token 8
+    pf = make_prefill_step(cfg, cache_len=16)
+    _, caches = pf(params, {"tokens": toks[:, :8]})
+    logits_dec, _ = api.decode_step(cfg, params, toks[:, 8:9], caches,
+                                    jnp.array(8, jnp.int32))
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(logits_dec[0, 0], np.float32),
+                               np.asarray(logits_full[0, 8], np.float32),
+                               atol=5e-2, rtol=5e-2)

@@ -1,0 +1,81 @@
+"""Analytic tier: PS fixed point, MVA, KKT bisection."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mva import (
+    aria_bounds,
+    aria_demand,
+    job_response,
+    min_slots_for_deadline,
+    mva_response,
+    mva_response_batch,
+    ps_response,
+    ps_response_batch,
+)
+from repro.core.problem import JobProfile
+
+PROF = JobProfile(n_map=100, n_reduce=20, m_avg=2000, m_max=5000,
+                  r_avg=1000, r_max=2500)
+
+
+def test_single_user_equals_demand():
+    # H=1: job gets the whole cluster -> T = A/c + B exactly
+    a, b = aria_demand(PROF)
+    t = job_response(PROF, 100, think=1e9, h_users=1)
+    assert t == pytest.approx(a / 100 + b, rel=1e-6)
+
+
+def test_estimate_within_aria_bounds_shape():
+    lo, up = aria_bounds(PROF, 50)
+    a, b = aria_demand(PROF)
+    est = a / 50 + b
+    assert lo <= est <= up * 1.01
+
+
+def test_ps_saturation_limit():
+    # Z << T, many users: each job sees c/H cores -> T ~ A*H/c + B
+    a, b = aria_demand(PROF)
+    t = ps_response(a / 100, b, think=1.0, h_users=10)
+    assert t == pytest.approx(a * 10 / 100 + b, rel=0.05)
+
+
+@given(c=st.integers(10, 2000), h=st.integers(1, 40),
+       z=st.floats(10.0, 1e6))
+@settings(max_examples=100, deadline=None)
+def test_ps_monotonicities(c, h, z):
+    a, b = aria_demand(PROF)
+    t = ps_response(a / c, b, z, h)
+    assert ps_response(a / (2 * c), b, z, h) <= t + 1e-6          # more cores
+    assert ps_response(a / c, b, z, h + 1) >= t - 1e-6            # more users
+    assert ps_response(a / c, b, 2 * z, h) <= t + 1e-6            # more think
+
+
+def test_mva_textbook():
+    # single queue + delay, H=1: R = D
+    assert mva_response(100.0, 1000.0, 1) == pytest.approx(100.0)
+    # heavy load: R -> H*D - Z
+    r = mva_response(1000.0, 10.0, 10)
+    assert r == pytest.approx(10 * 1000.0 - 10.0, rel=0.05)
+
+
+def test_kkt_bisection_binds_deadline():
+    d = 50_000.0
+    c = min_slots_for_deadline(PROF, think=10_000, h_users=5, deadline=d)
+    assert c > 1
+    assert job_response(PROF, c, 10_000, 5) <= d
+    assert job_response(PROF, c - 1, 10_000, 5) > d
+
+
+def test_batched_matches_scalar():
+    a, b = aria_demand(PROF)
+    cs = np.array([50, 100, 200, 400], np.float32)
+    out = ps_response_batch(jnp.asarray(a / cs), jnp.full(4, b, jnp.float32),
+                            jnp.full(4, 10_000.0), jnp.full(4, 5.0))
+    ref = [ps_response(a / c, b, 10_000.0, 5) for c in cs]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
+    mv = mva_response_batch(jnp.asarray([100.0], jnp.float32),
+                            jnp.asarray([1000.0], jnp.float32), 3)
+    assert float(mv[0]) == pytest.approx(mva_response(100.0, 1000.0, 3),
+                                         rel=1e-6)

@@ -1,0 +1,46 @@
+"""Reserved/spot mix optimality (P1h/P1i) — unit + hypothesis properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pricing import mix_cost, optimal_mix
+from repro.core.problem import VMType
+
+VM = VMType(name="t", cores=4, sigma=0.07, pi=0.22)
+
+
+def test_basic_mix():
+    r, s, cost = optimal_mix(10, 0.3, VM)
+    assert r + s == 10 and s == 3
+    assert cost == pytest.approx(0.07 * 3 + 0.22 * 7)
+
+
+def test_spot_not_cheaper():
+    vm = VMType(name="t", cores=4, sigma=0.30, pi=0.22)
+    r, s, _ = optimal_mix(10, 0.3, vm)
+    assert s == 0 and r == 10
+
+
+@given(nu=st.integers(0, 500), eta=st.floats(0.0, 0.9),
+       sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_mix_invariants(nu, eta, sigma, pi):
+    vm = VMType(name="x", cores=2, sigma=sigma, pi=pi)
+    r, s, cost = optimal_mix(nu, eta, vm)
+    assert r + s == nu and r >= 0 and s >= 0
+    # constraint (P1h): s <= eta/(1-eta) * r  (within integer rounding)
+    if nu > 0 and eta < 1.0:
+        assert s <= eta / (1.0 - eta) * r + 1e-9
+    # optimality: no cheaper admissible split exists
+    for s_alt in range(0, nu + 1):
+        r_alt = nu - s_alt
+        if s_alt <= eta * nu:
+            assert cost <= sigma * s_alt + pi * r_alt + 1e-9
+
+
+@given(eta=st.floats(0.0, 0.8))
+@settings(max_examples=50, deadline=None)
+def test_cost_monotone_in_nu(eta):
+    costs = [mix_cost(nu, eta, VM) for nu in range(0, 50)]
+    assert all(b >= a - 1e-12 for a, b in zip(costs, costs[1:]))

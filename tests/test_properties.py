@@ -1,0 +1,71 @@
+"""System-level invariants under hypothesis — the paper's qualitative laws
+plus conservation properties of the simulators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster_sim import WorkloadSpec, simulate_cluster
+from repro.core.mva import aria_demand, job_response, ps_response
+from repro.core.pricing import optimal_mix
+from repro.core.problem import ApplicationClass, JobProfile, VMType
+from repro.core.milp import initial_class_solution
+
+
+@given(n_map=st.integers(4, 400), n_reduce=st.integers(1, 100),
+       m=st.floats(200, 20_000), r=st.floats(100, 10_000),
+       users=st.integers(1, 24), deadline=st.floats(10_000, 5e6))
+@settings(max_examples=60, deadline=None)
+def test_initial_solution_binds_deadline(n_map, n_reduce, m, r, users,
+                                         deadline):
+    prof = JobProfile(n_map=n_map, n_reduce=n_reduce, m_avg=m, m_max=2.5 * m,
+                      r_avg=r, r_max=2.5 * r)
+    vm = VMType(name="v", cores=8, sigma=0.05, pi=0.20)
+    cls = ApplicationClass(name="c", h_users=users, think_ms=10_000,
+                           deadline_ms=deadline, eta=0.3,
+                           profiles={"v": prof})
+    sol = initial_class_solution(cls, vm)
+    if sol is None:        # genuinely infeasible under the analytic floor
+        a, b = aria_demand(prof)
+        assert b > deadline * 0.3   # only when the floor is in play
+        return
+    assert sol.predicted_ms <= deadline
+    if sol.nu > 1:
+        t_less = job_response(prof, (sol.nu - 1) * vm.slots, 10_000, users)
+        assert t_less > deadline    # minimality (KKT binding)
+
+
+@given(st.integers(1, 60), st.floats(0.0, 0.85))
+@settings(max_examples=60, deadline=None)
+def test_mix_cost_never_beats_all_spot_bound(nu, eta):
+    vm = VMType(name="v", cores=4, sigma=0.05, pi=0.20)
+    _, _, cost = optimal_mix(nu, eta, vm)
+    assert cost >= vm.sigma * nu - 1e-9         # all-spot lower bound
+    assert cost <= vm.pi * nu + 1e-9            # all-reserved upper bound
+
+
+@given(slots=st.integers(2, 40), users=st.integers(1, 6),
+       seed=st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_cluster_sim_conservation(slots, users, seed):
+    spec = WorkloadSpec(name="t", n_map=20, n_reduce=5, map_ms=800,
+                        reduce_ms=400, cv=0.3, startup_ms=50)
+    mean, jobs = simulate_cluster(spec, slots=slots, h_users=users,
+                                  think_ms=1000, max_jobs=15,
+                                  warmup_jobs=2, seed=seed)
+    assert len(jobs) >= 15
+    span = max(j.finish for j in jobs) - min(j.submit for j in jobs)
+    work = sum(j.map_durations.sum() + j.reduce_durations.sum()
+               for j in jobs)
+    assert work <= slots * span * 1.3           # utilization <= 1 (+ slack
+    # for jobs overlapping the measurement window boundaries)
+
+
+@given(c=st.integers(8, 4096), h=st.integers(1, 64))
+@settings(max_examples=80, deadline=None)
+def test_ps_response_bounded_by_asymptotes(c, h):
+    prof = JobProfile(n_map=100, n_reduce=20, m_avg=1000, m_max=2500,
+                      r_avg=500, r_max=1200)
+    a, b = aria_demand(prof)
+    t = ps_response(a / c, b, think=10_000, h_users=h)
+    assert t >= a / c + b - 1e-6                # single-job lower bound
+    assert t <= a * h / c + b + 1e-3            # full-contention upper bound

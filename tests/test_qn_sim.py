@@ -1,0 +1,60 @@
+"""QN simulator: degenerate-case exactness + queueing-theory laws."""
+import numpy as np
+import pytest
+
+from repro.core.mva import mva_response
+from repro.core.qn_sim import QNParams, simulate, response_time
+
+
+def test_mm1_closed_matches_mva():
+    # 1 map + 1 tiny reduce on 1 slot == single-queue closed network
+    p = QNParams(n_map=1, n_reduce=1, m_avg=1000.0, r_avg=1.0,
+                 think_ms=10_000.0, h_users=5, slots=1,
+                 n_events=60_000, warmup_jobs=50, seed=1)
+    m, c = simulate(p, replications=3)
+    exact = mva_response(1001.0, 10_000.0, 5)
+    assert c > 1000
+    assert m == pytest.approx(exact, rel=0.08)
+
+
+def test_saturation_asymptote():
+    # 5 users, 1 slot, 10x1s maps: T -> H * service - Z
+    p = QNParams(n_map=10, n_reduce=1, m_avg=1000.0, r_avg=1.0,
+                 think_ms=1000.0, h_users=5, slots=1,
+                 n_events=2 ** 16, warmup_jobs=100, seed=1)
+    m, _ = simulate(p, 1)
+    assert m == pytest.approx(5 * 10_001 - 1000, rel=0.1)
+
+
+def test_forkjoin_wide_cluster_is_max_task():
+    # single wave on a huge cluster: response ~ E[max of n exp(mu)] = mu*H_n
+    n = 64
+    p = QNParams(n_map=n, n_reduce=1, m_avg=1000.0, r_avg=1.0,
+                 think_ms=10_000.0, h_users=1, slots=256,
+                 n_events=2 ** 14, warmup_jobs=5, seed=3)
+    m, _ = simulate(p, 2)
+    harmonic = sum(1.0 / k for k in range(1, n + 1))
+    assert m == pytest.approx(1000.0 * harmonic, rel=0.2)
+
+
+def test_more_slots_never_hurts():
+    base = dict(n_map=100, n_reduce=20, m_avg=2000.0, r_avg=1000.0,
+                think_ms=5000.0, h_users=4, warmup_jobs=5, seed=5)
+    ts = []
+    for slots in (16, 32, 64, 128):
+        p = QNParams(slots=slots, n_events=2 ** 16, **base)
+        m, _ = simulate(p, 1)
+        ts.append(m)
+    assert all(b <= a * 1.1 for a, b in zip(ts, ts[1:]))  # 10% sim noise
+
+
+def test_replay_mode_uses_samples():
+    # constant samples -> deterministic service: tight response variance
+    ms = np.full(64, 500.0, np.float32)
+    rs = np.full(64, 100.0, np.float32)
+    t = response_time(n_map=8, n_reduce=2, m_avg=0, r_avg=0,
+                      think_ms=5000.0, h_users=1, slots=8, min_jobs=20,
+                      warmup_jobs=5, seed=0, replications=1,
+                      m_samples=ms, r_samples=rs)
+    # one map wave (8 tasks on 8 slots) + one reduce wave on 2 tasks
+    assert t == pytest.approx(500.0 + 100.0, rel=0.05)

@@ -1,0 +1,85 @@
+"""End-to-end behaviour: the full D-SPACE4Cloud loop (Figure 3) on a
+two-class problem, plus the JSON round trip and the paper's qualitative
+scenario claims at small scale."""
+import json
+
+import pytest
+
+from repro.core.evaluators import mva_evaluator
+from repro.core.hillclimb import hill_climb
+from repro.core.milp import initial_solution
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import (
+    ApplicationClass,
+    JobProfile,
+    Problem,
+    VMType,
+    solution_cost,
+)
+
+SMALL = VMType(name="small", cores=4, sigma=0.07, pi=0.22,
+               containers_per_core=2)
+BIG = VMType(name="big", cores=20, sigma=0.50, pi=1.60, speed=1.35)
+
+PROF = JobProfile(n_map=64, n_reduce=16, m_avg=4000, m_max=9000,
+                  r_avg=2000, r_max=4500)
+
+
+def _problem(deadline_ms=120_000, users=4):
+    profiles = {"small": PROF, "big": PROF.scaled(1.35)}
+    c1 = ApplicationClass(name="q1", h_users=users, think_ms=10_000,
+                          deadline_ms=deadline_ms, eta=0.3,
+                          profiles=profiles)
+    c2 = ApplicationClass(name="q2", h_users=2, think_ms=10_000,
+                          deadline_ms=deadline_ms * 2, eta=0.3,
+                          profiles={"small": PROF.scaled(0.5),
+                                    "big": PROF.scaled(0.5 * 1.35)})
+    return Problem(classes=[c1, c2], vm_types=[SMALL, BIG])
+
+
+def test_full_optimizer_run():
+    tool = DSpace4Cloud(_problem(), min_jobs=15, replications=1)
+    report = tool.run(parallel=True)
+    assert set(report.solutions) == {"q1", "q2"}
+    for sol in report.solutions.values():
+        assert sol.feasible
+        assert sol.reserved + sol.spot == sol.nu
+    assert report.total_cost_per_h == pytest.approx(
+        solution_cost(report.solutions))
+    assert report.evals > 0
+    js = json.loads(report.to_json())
+    assert "classes" in js and js["total_cost_per_h"] > 0
+
+
+def test_fast_mode_agrees_with_classic():
+    tool = DSpace4Cloud(_problem(), min_jobs=15, replications=1)
+    classic = tool.run()
+    tool2 = DSpace4Cloud(_problem(), min_jobs=15, replications=1)
+    fast = tool2.run_fast()
+    # same VM choice; nu within 1 of each other; fast uses fewer sim calls
+    for name in classic.solutions:
+        assert abs(classic.solutions[name].nu - fast.solutions[name].nu) <= 1
+    assert fast.evals <= classic.evals
+
+
+def test_cost_grows_with_tighter_deadline_and_more_users():
+    # paper §4.3 scenario claims, via the analytic evaluator (deterministic)
+    def solve(deadline_ms, users):
+        prob = _problem(deadline_ms, users)
+        sols, _ = hill_climb(prob, initial_solution(prob), mva_evaluator,
+                             parallel=False)
+        return solution_cost(sols)
+
+    loose = solve(240_000, 4)
+    tight = solve(90_000, 4)
+    assert tight >= loose
+    more_users = solve(240_000, 12)
+    assert more_users >= loose
+
+
+def test_problem_json_roundtrip():
+    prob = _problem()
+    prob2 = Problem.from_json(prob.to_json())
+    assert [c.name for c in prob2.classes] == ["q1", "q2"]
+    assert prob2.vm_by_name("big").speed == pytest.approx(1.35)
+    assert prob2.classes[0].profiles["small"].n_map == 64

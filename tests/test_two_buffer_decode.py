@@ -1,0 +1,57 @@
+"""Two-buffer decode KV (sharded read-only main + replicated recent ring)
+must match single-buffer decode exactly — the §Perf optimization that
+removes the DUS-on-sharded-seq collective pathology."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.distributed.sharding import init_params
+from repro.models import api
+from repro.serve.step import make_prefill_step
+
+
+def _copy_into(two_buf, prefill_caches):
+    flat = jax.tree_util.tree_flatten_with_path(prefill_caches)[0]
+    cmap = {tuple(str(p) for p in path): leaf for path, leaf in flat}
+
+    def fill(path, leaf):
+        src = cmap.get(tuple(str(p) for p in path))
+        return src if src is not None and src.shape == leaf.shape else leaf
+
+    return jax.tree_util.tree_map_with_path(fill, two_buf)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "gemma3-27b", "zamba2-7b",
+                                  "whisper-tiny", "llama4-scout-17b-a16e"])
+def test_two_buffer_matches_single_buffer(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(api.param_specs(cfg), jax.random.key(1))
+    S, B = 16, 2
+    toks = jax.random.randint(jax.random.key(2), (B, S), 1, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.frontend_len, cfg.d_model),
+            jnp.bfloat16) * 0.02
+    if cfg.frontend == "patches":
+        batch["patches"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.frontend_len, cfg.d_model),
+            jnp.bfloat16) * 0.02
+
+    pf = make_prefill_step(cfg, cache_len=S + 8)
+    _, c1 = pf(params, batch)
+    c2 = _copy_into(api.init_caches(cfg, B, S + 8, recent_len=4), c1)
+
+    tok1 = tok2 = toks[:, -1:]
+    for i in range(3):
+        lg1, c1 = api.decode_step(cfg, params, tok1, c1,
+                                  jnp.array(S + i, jnp.int32))
+        lg2, c2 = api.decode_step(cfg, params, tok2, c2,
+                                  jnp.array(S + i, jnp.int32))
+        err = float(jnp.abs(lg1.astype(jnp.float32)
+                            - lg2.astype(jnp.float32)).max())
+        assert err < 5e-2, (arch, i, err)          # bf16 noise band
+        assert bool(jnp.all(jnp.argmax(lg1, -1) == jnp.argmax(lg2, -1)))
+        tok1 = jnp.argmax(lg1, -1).astype(jnp.int32)
+        tok2 = jnp.argmax(lg2, -1).astype(jnp.int32)
