@@ -1,0 +1,127 @@
+"""Batched QN sweep vs scalar point-wise evaluation (the PR-1 tentpole).
+
+Three measurements on the hc_convergence scenario (TPC-DS Q1, 10 users):
+
+  1. raw evaluator throughput: a nu frontier evaluated point-by-point
+     (one XLA dispatch per point x replication) vs one fused
+     ``response_time_batch`` call — evaluations/sec for both, plus strict
+     numerical parity (same seeds => same estimates, asserted);
+  2. end-to-end optimizer: ``DSpace4Cloud.run`` with the scalar evaluator
+     vs the batched frontier evaluator — simulator device dispatches and
+     wall time (target: >=5x fewer dispatches, same nu* within noise);
+  3. fully batched fast mode: AMVA frontier proposes, one fused QN window
+     verifies.
+
+Usage: PYTHONPATH=src python -m benchmarks.batched_qn [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timer
+from repro.core import qn_sim
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.workloads import scenario_problem
+
+
+def _frontier_throughput(prob, samples, quick: bool):
+    """Scalar loop vs one fused call over the same nu frontier."""
+    cls = prob.classes[0]
+    vm = prob.vm_types[0]
+    prof = cls.profile_for(vm)
+    ms, rs = samples[(cls.name, vm.name)]
+    n = 8 if quick else 24
+    nus = np.arange(2, 2 + n)
+    kw = dict(n_map=prof.n_map, n_reduce=prof.n_reduce, m_avg=prof.m_avg,
+              r_avg=prof.r_avg, think_ms=cls.think_ms, h_users=cls.h_users,
+              min_jobs=10 if quick else 20, warmup_jobs=4, seed=0,
+              replications=1, m_samples=ms, r_samples=rs)
+
+    # warm the jit caches so we time steady-state dispatch, not compilation
+    # (the scalar path compiles one program per pow2 max_slots bucket, so
+    # every nu in the sweep must be visited once before timing)
+    for s in nus:
+        qn_sim.response_time(slots=int(s) * vm.slots, **kw)
+    qn_sim.response_time_batch(slots=nus * vm.slots, **kw)
+
+    d0 = qn_sim.dispatch_count()
+    with timer() as t_scalar:
+        scalar = np.array([qn_sim.response_time(slots=int(s) * vm.slots, **kw)
+                           for s in nus])
+    d_scalar = qn_sim.dispatch_count() - d0
+
+    d0 = qn_sim.dispatch_count()
+    with timer() as t_batch:
+        batched = qn_sim.response_time_batch(slots=nus * vm.slots, **kw)
+    d_batch = qn_sim.dispatch_count() - d0
+
+    finite = np.isfinite(scalar)
+    assert np.allclose(scalar[finite], batched[finite], rtol=1e-6), \
+        "batched/scalar parity violated"
+    return {
+        "points": int(n),
+        "scalar_s": t_scalar.s, "batched_s": t_batch.s,
+        "scalar_evals_per_s": n / max(t_scalar.s, 1e-9),
+        "batched_evals_per_s": n / max(t_batch.s, 1e-9),
+        "scalar_dispatches": int(d_scalar),
+        "batched_dispatches": int(d_batch),
+        "parity_max_rel_err": float(np.max(
+            np.abs(scalar[finite] - batched[finite]) /
+            np.maximum(scalar[finite], 1e-9))),
+    }
+
+
+def _optimizer_end_to_end(prob, samples, quick: bool):
+    """Scalar vs batched DSpace4Cloud.run + fully batched run_fast."""
+    min_jobs = 10 if quick else 25
+    out = {}
+    for mode, batched in (("scalar", False), ("batched", True)):
+        tool = DSpace4Cloud(prob, min_jobs=min_jobs, replications=1,
+                            samples=samples, batched=batched)
+        with timer() as t:
+            rep = tool.run()
+        out[mode] = {"wall_s": t.s, "evals": rep.evals,
+                     "dispatches": rep.qn_dispatches,
+                     "cost": rep.total_cost_per_h,
+                     "nu": {k: v.nu for k, v in rep.solutions.items()}}
+
+    tool = DSpace4Cloud(prob, min_jobs=min_jobs, replications=1,
+                        samples=samples, batched=True)
+    with timer() as t:
+        rep = tool.run_fast()
+    out["fast_batched"] = {"wall_s": t.s, "evals": rep.evals,
+                           "dispatches": rep.qn_dispatches,
+                           "cost": rep.total_cost_per_h,
+                           "nu": {k: v.nu for k, v in rep.solutions.items()}}
+    return out
+
+
+def run(quick: bool = False):
+    prob, samples, _ = scenario_problem("Q1", 10, 160_000.0)
+    out = {"frontier": _frontier_throughput(prob, samples, quick),
+           "optimizer": _optimizer_end_to_end(prob, samples, quick)}
+
+    fr = out["frontier"]
+    op = out["optimizer"]
+    dispatch_ratio = op["scalar"]["dispatches"] / max(
+        op["batched"]["dispatches"], 1)
+    agree = all(abs(op["scalar"]["nu"][k] - op["batched"]["nu"][k]) <= 2
+                for k in op["scalar"]["nu"])
+    out["dispatch_ratio"] = dispatch_ratio
+    out["nu_agree"] = agree
+
+    save_json("batched_qn", out)
+    emit("batched_qn", fr["batched_s"] / fr["points"] * 1e6,
+         f"frontier_speedup={fr['scalar_s'] / max(fr['batched_s'], 1e-9):.2f}x;"
+         f"frontier_dispatches={fr['scalar_dispatches']}->"
+         f"{fr['batched_dispatches']};"
+         f"opt_dispatches={op['scalar']['dispatches']}->"
+         f"{op['batched']['dispatches']}(x{dispatch_ratio:.1f});"
+         f"fast_dispatches={op['fast_batched']['dispatches']};"
+         f"parity_err={fr['parity_max_rel_err']:.2e};agree={agree}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

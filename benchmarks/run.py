@@ -23,6 +23,7 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (
+        batched_qn,
         cost_deadline,
         hc_convergence,
         kernel_microbench,
@@ -35,6 +36,7 @@ def main() -> None:
         "table3": lambda: table3_qn_validation.run(quick=quick),
         "cost_deadline": lambda: cost_deadline.run(quick=quick),
         "hc_convergence": lambda: hc_convergence.run(quick=quick),
+        "batched_qn": lambda: batched_qn.run(quick=quick),
         "tpu_capacity_plan": lambda: tpu_capacity_plan.run(quick=quick),
         "roofline_report": lambda: roofline_report.run(quick=quick),
         "kernel_microbench": lambda: kernel_microbench.run(quick=quick),

@@ -1,17 +1,25 @@
-"""Response-time evaluators at the three fidelity tiers.
+"""Response-time evaluators at the four fidelity tiers.
 
   * "mva"      — analytic closed MVA (the MINLP-tier model; instant).
   * "amva"     — batched MVA frontier, Pallas-kernel-backed when available
                  (beyond-paper fast tier; evaluates whole nu ranges at once).
   * "qn"       — JAX event-driven QN simulation (the paper's accurate tier).
+                 ``make_qn_evaluator`` dispatches one point per call;
+                 ``make_batched_qn_evaluator`` sweeps whole nu frontiers
+                 (and several VM types) in one fused device call with
+                 cache-aware gather of already-known points.
   * "detailed" — trace-replay cluster simulator (ground truth; used for
                  validation only, never inside the optimizer — mirroring the
                  paper, where the real cluster is not in the loop).
+
+See docs/evaluators.md for the accuracy-vs-cost trade-offs and when the
+optimizer uses each tier.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional
+import threading
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -51,6 +59,108 @@ def make_qn_evaluator(min_jobs: int = 40, warmup_jobs: int = 8,
         cache[key] = t
         return t
     return evaluate
+
+
+class BatchedQNEvaluator:
+    """QN-tier evaluator that amortizes device dispatches over candidate
+    sweeps.
+
+    Where the point-wise evaluator pays ``replications`` XLA dispatches per
+    probed (class, vm, nu), this one evaluates a whole frontier in ONE fused
+    call of ``qn_sim.response_time_batch``: cached points are gathered from
+    the shared dict cache, only the misses go to the device, and every
+    result lands back in the cache under the same ``(class, vm, nu)`` keys
+    the scalar evaluator uses — so the two are drop-in interchangeable and
+    numerically identical for the same seed.
+
+    Counters (for benchmarks): ``device_calls`` fused dispatches issued,
+    ``points_evaluated`` simulator configurations they covered.
+    """
+
+    def __init__(self, min_jobs: int = 40, warmup_jobs: int = 8,
+                 replications: int = 2, seed: int = 0,
+                 cache: Optional[dict] = None,
+                 samples: Optional[Dict] = None):
+        self.min_jobs = min_jobs
+        self.warmup_jobs = warmup_jobs
+        self.replications = replications
+        self.seed = seed
+        self.cache = cache if cache is not None else {}
+        self.samples = samples or {}
+        self.device_calls = 0
+        self.points_evaluated = 0
+        self._counter_lock = threading.Lock()   # hill_climb probes from a
+        #                                         thread pool (per class)
+
+    # ------------------------------------------------------------ frontier
+    def evaluate_frontier(self, cls: ApplicationClass, vm: VMType,
+                          nus: Sequence[int]) -> np.ndarray:
+        """Response time for every nu in ``nus`` (one device call for all
+        cache misses).  Returns a float array aligned with ``nus``."""
+        return np.asarray(
+            self.evaluate_many((cls, vm, int(n)) for n in nus))
+
+    # ------------------------------------------------- multi-VM fused call
+    def evaluate_many(
+        self, items: Iterable[Tuple[ApplicationClass, VMType, int]],
+    ) -> List[float]:
+        """Evaluate arbitrary (class, vm, nu) points, fusing everything that
+        can share a device program: one dispatch per (h_users, replay-list)
+        group — so a sweep across several VM types of one class is a single
+        call.  Cached points never reach the device.  Returns times aligned
+        with ``items``."""
+        items = list(items)
+        todo: Dict[tuple, list] = {}
+        seen = set()
+        for idx, (cls, vm, nu) in enumerate(items):
+            key = (cls.name, vm.name, int(nu))
+            if key in self.cache or key in seen:
+                continue
+            seen.add(key)
+            replay = (cls.name, vm.name) if (cls.name, vm.name) \
+                in self.samples else None
+            todo.setdefault((cls.h_users, replay), []).append(idx)
+        for (h_users, replay), idxs in todo.items():
+            profs = [items[i][0].profile_for(items[i][1]) for i in idxs]
+            ms = rs = None
+            if replay is not None:
+                ms, rs = self.samples[replay]
+            ts = qn_sim.response_time_batch(
+                n_map=np.asarray([p.n_map for p in profs], np.int64),
+                n_reduce=np.asarray([p.n_reduce for p in profs], np.int64),
+                m_avg=np.asarray([p.m_avg for p in profs], np.float32),
+                r_avg=np.asarray([p.r_avg for p in profs], np.float32),
+                think_ms=np.asarray([items[i][0].think_ms for i in idxs],
+                                    np.float32),
+                h_users=h_users,
+                slots=np.asarray([int(items[i][2]) * items[i][1].slots
+                                  for i in idxs], np.int64),
+                min_jobs=self.min_jobs, warmup_jobs=self.warmup_jobs,
+                seed=self.seed, replications=self.replications,
+                m_samples=ms, r_samples=rs)
+            for i, t in zip(idxs, ts):
+                cls, vm, nu = items[i]
+                self.cache[(cls.name, vm.name, int(nu))] = float(t)
+            with self._counter_lock:
+                self.device_calls += 1
+                self.points_evaluated += len(idxs)
+        return [self.cache[(c.name, v.name, int(n))] for c, v, n in items]
+
+    # --------------------------------------------------- scalar-compatible
+    def __call__(self, cls: ApplicationClass, vm: VMType, nu: int) -> float:
+        return float(self.evaluate_frontier(cls, vm, [nu])[0])
+
+
+def make_batched_qn_evaluator(min_jobs: int = 40, warmup_jobs: int = 8,
+                              replications: int = 2, seed: int = 0,
+                              cache: Optional[dict] = None,
+                              samples: Optional[Dict] = None,
+                              ) -> BatchedQNEvaluator:
+    """Batched counterpart of ``make_qn_evaluator`` — same cache keys, same
+    per-point numbers for the same seed, but whole frontiers per dispatch."""
+    return BatchedQNEvaluator(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
+                              replications=replications, seed=seed,
+                              cache=cache, samples=samples)
 
 
 def make_detailed_evaluator(spec_by_class: Dict[str, "object"],

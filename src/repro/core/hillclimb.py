@@ -1,4 +1,4 @@
-"""Parallel Local Search Optimizer — Algorithm 1, verbatim structure.
+"""Parallel Local Search Optimizer — Algorithm 1, in two gaits.
 
 Per class (independently, in parallel): evaluate the initial solution with
 the accurate evaluator (QN simulation by default); while infeasible,
@@ -6,6 +6,16 @@ IncrementCluster; otherwise DecrementCluster while feasible and step back
 once.  Every move re-optimizes the reserved/spot mix (pricing.optimal_mix).
 Cost is linear in nu with prices fixed, so HC reaches the class optimum
 (paper §3.2) up to evaluator noise.
+
+``optimize_class`` is the paper-verbatim point-wise walk (one evaluator
+call, i.e. one XLA dispatch per probed nu).  ``sweep_class`` is the batched
+gait: it proposes a *window* of nu candidates around the incumbent,
+evaluates the whole window in one fused device call
+(``BatchedQNEvaluator.evaluate_frontier``), and jumps straight to the
+feasible minimum-cost point — same fixed point as the scalar walk when the
+evaluator is monotone in nu, at a fraction of the dispatches.
+``hill_climb`` picks the gait automatically from the evaluator's
+capabilities.
 """
 from __future__ import annotations
 
@@ -83,18 +93,108 @@ def optimize_class(cls: ApplicationClass, vm: VMType, nu0: int,
     return _solution(cls, vm, nu, t)
 
 
+def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
+                evaluator, *, window: int = 16, max_nu: int = 8192,
+                stall_windows: int = 2,
+                trace: Optional[HCTrace] = None) -> ClassSolution:
+    """Frontier-sweep Algorithm 1 for one class.
+
+    Each round evaluates a contiguous window of nu candidates in ONE fused
+    device call and moves in window-sized strides:
+
+      * some point feasible -> take the smallest feasible nu (cost is
+        strictly increasing in nu, so that is the window's minimum-cost
+        feasible point); if it sits on the window's lower edge, slide the
+        window below it and keep looking;
+      * nothing feasible -> slide the window up (pursuit of feasibility),
+        aborting after ``stall_windows`` consecutive windows whose best
+        response time improves by <0.5% (response floored above deadline —
+        no cluster size will help).
+
+    ``evaluator`` must expose ``evaluate_frontier(cls, vm, nus)`` (see
+    ``BatchedQNEvaluator``); cached points cost nothing to re-sweep.
+    Reaches the same fixed point as the point-wise walk whenever the
+    evaluator is monotone non-increasing in nu; under simulation noise it
+    may legitimately land within a point or two of it (it takes the global
+    window minimum where the scalar walk stops at the first infeasible
+    probe).
+    """
+    t_start = time.time()
+    tr = trace if trace is not None else HCTrace(cls=cls.name)
+    window = max(2, window)
+
+    nu0 = min(max(1, nu0), max_nu)     # an out-of-catalog incumbent would
+    lo = max(1, nu0 - window // 2)     # otherwise make the window empty
+    hi = min(max_nu, lo + window - 1)
+    best: Optional[Tuple[int, float]] = None   # feasible incumbent
+    prev_floor = float("inf")
+    stall = 0
+    while True:
+        nus = list(range(lo, hi + 1))
+        ts = evaluator.evaluate_frontier(cls, vm, nus)
+        tr.evals += len(nus)
+        for n, t in zip(nus, ts):
+            tr.moves.append((n, float(t), bool(t <= cls.deadline_ms)))
+        feas = [i for i, t in enumerate(ts) if t <= cls.deadline_ms]
+
+        if feas:
+            nu_star, t_star = nus[feas[0]], float(ts[feas[0]])
+            if best is None or nu_star < best[0]:
+                best = (nu_star, t_star)
+            if nu_star > lo or lo == 1:        # interior point: converged
+                break
+            hi = nu_star - 1                   # on the edge: look below
+            lo = max(1, hi - window + 1)
+            continue
+
+        if best is not None:                   # nothing below the incumbent
+            break
+        if hi >= max_nu:                       # ran off the catalog
+            best = (hi, float(ts[-1]))
+            break
+        floor = float(min(ts))                 # pursuit of feasibility
+        stall = stall + 1 if floor > prev_floor * 0.995 else 0
+        prev_floor = min(prev_floor, floor)
+        if stall >= stall_windows:
+            best = (hi, float(ts[-1]))
+            break
+        lo = hi + 1
+        hi = min(max_nu, lo + window - 1)
+
+    tr.wall_s = time.time() - t_start
+    return _solution(cls, vm, best[0], best[1])
+
+
+def refine_class(cls: ApplicationClass, vm: VMType, nu0: int,
+                 evaluate: Evaluator, *, window: int = 16,
+                 max_nu: int = 8192, use_frontier: Optional[bool] = None,
+                 trace: Optional[HCTrace] = None) -> ClassSolution:
+    """One-class Algorithm 1, picking the gait: the window-sweep when
+    ``evaluate`` exposes ``evaluate_frontier`` (the batched QN evaluator),
+    otherwise the paper-verbatim point-wise walk.  ``use_frontier`` forces
+    either."""
+    if use_frontier is None:
+        use_frontier = hasattr(evaluate, "evaluate_frontier")
+    if use_frontier:
+        return sweep_class(cls, vm, nu0, evaluate, window=window,
+                           max_nu=max_nu, trace=trace)
+    return optimize_class(cls, vm, nu0, evaluate, max_nu=max_nu, trace=trace)
+
+
 def hill_climb(
     problem: Problem, initial: Dict[str, ClassSolution],
     evaluate: Evaluator, *, parallel: bool = True, max_nu: int = 8192,
+    window: int = 16, use_frontier: Optional[bool] = None,
 ) -> Tuple[Dict[str, ClassSolution], Dict[str, HCTrace]]:
-    """Algorithm 1: parallel-for over classes."""
+    """Algorithm 1: parallel-for over classes (gait per ``refine_class``)."""
     traces = {c.name: HCTrace(cls=c.name) for c in problem.classes}
 
     def run_one(cls: ApplicationClass) -> Tuple[str, ClassSolution]:
         init = initial[cls.name]
         vm = problem.vm_by_name(init.vm_type)
-        sol = optimize_class(cls, vm, init.nu, evaluate, max_nu=max_nu,
-                             trace=traces[cls.name])
+        sol = refine_class(cls, vm, init.nu, evaluate, window=window,
+                           max_nu=max_nu, use_frontier=use_frontier,
+                           trace=traces[cls.name])
         return cls.name, sol
 
     if parallel and len(problem.classes) > 1:

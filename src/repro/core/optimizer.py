@@ -2,10 +2,16 @@
 
 JSON problem description in -> Initial Solution Builder (analytic/KKT) ->
 Parallel Local Search Optimizer (hill climbing on the QN simulator) ->
-JSON solution out.  ``fast_mode`` adds the beyond-paper batched-AMVA
-frontier pass: the AMVA frontier proposes nu*, the QN simulator verifies
-and HC only polishes locally (orders of magnitude fewer simulator calls —
-benchmarked in benchmarks/hc_convergence.py).
+JSON solution out.  By default the optimizer runs in *batched* mode: a
+``BatchedQNEvaluator`` sweeps whole nu windows per fused device call
+instead of paying one XLA dispatch per probe (``batched=False`` restores
+the paper-faithful point-wise walk; per-point estimates are identical for
+the same seed, though under simulation noise the two gaits can settle a
+point or two apart — see ``sweep_class``).
+``run_fast`` adds the beyond-paper batched-AMVA frontier pass: the AMVA
+frontier proposes nu*, then ONE batched QN call verifies the whole window
+around it (orders of magnitude fewer simulator dispatches — benchmarked in
+benchmarks/hc_convergence.py and benchmarks/batched_qn.py).
 """
 from __future__ import annotations
 
@@ -16,12 +22,14 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
+from repro.core import qn_sim
 from repro.core.evaluators import (
     amva_frontier,
+    make_batched_qn_evaluator,
     make_qn_evaluator,
     mva_evaluator,
 )
-from repro.core.hillclimb import HCTrace, hill_climb, optimize_class
+from repro.core.hillclimb import HCTrace, hill_climb, refine_class
 from repro.core.milp import initial_solution
 from repro.core.pricing import optimal_mix
 from repro.core.problem import ClassSolution, Problem, solution_cost
@@ -35,12 +43,14 @@ class RunReport:
     evals: int
     traces: Dict[str, HCTrace] = field(default_factory=dict)
     initial: Optional[Dict[str, ClassSolution]] = None
+    qn_dispatches: int = 0        # simulator device dispatches this run
 
     def to_json(self) -> str:
         return json.dumps({
             "total_cost_per_h": self.total_cost_per_h,
             "wall_s": self.wall_s,
             "qn_evaluations": self.evals,
+            "qn_dispatches": self.qn_dispatches,
             "classes": {k: v.as_dict() for k, v in self.solutions.items()},
             "initial": ({k: v.as_dict() for k, v in self.initial.items()}
                         if self.initial else None),
@@ -48,33 +58,54 @@ class RunReport:
 
 
 class DSpace4Cloud:
-    """The tool: optimization scenario of Figure 3."""
+    """The tool: optimization scenario of Figure 3.
+
+    ``batched=True`` (default) probes the QN tier through the batched
+    frontier evaluator — whole candidate windows per device dispatch;
+    ``batched=False`` is the paper-faithful point-wise evaluator.  Both
+    share cache-key semantics and per-point numbers for the same seed
+    (final nu* may differ by a point or two under simulation noise — the
+    sweep takes the window-global feasible minimum where the walk stops at
+    the first infeasible probe).  ``window`` sets the sweep width of the
+    batched hill climber.
+    """
 
     def __init__(self, problem: Problem, *, min_jobs: int = 40,
-                 replications: int = 2, seed: int = 0, samples=None):
+                 replications: int = 2, seed: int = 0, samples=None,
+                 batched: bool = True, window: int = 16):
         self.problem = problem
+        self.window = window
         self._qn_cache: dict = {}
-        self.evaluate = make_qn_evaluator(
+        maker = make_batched_qn_evaluator if batched else make_qn_evaluator
+        self.evaluate = maker(
             min_jobs=min_jobs, replications=replications, seed=seed,
             cache=self._qn_cache, samples=samples)
 
     # ------------------------------------------------------------- classic
     def run(self, parallel: bool = True) -> RunReport:
-        """Paper-faithful: MINLP-tier initial solution + QN-driven HC."""
+        """MINLP-tier initial solution + QN-driven HC (Algorithm 1; the
+        window-sweep gait when the evaluator is batched)."""
         t0 = time.time()
+        d0 = qn_sim.dispatch_count()
         init = initial_solution(self.problem)
         sols, traces = hill_climb(self.problem, init, self.evaluate,
-                                  parallel=parallel)
+                                  parallel=parallel, window=self.window)
         evals = sum(t.evals for t in traces.values())
         return RunReport(solutions=sols,
                          total_cost_per_h=solution_cost(sols),
                          wall_s=time.time() - t0, evals=evals,
-                         traces=traces, initial=init)
+                         traces=traces, initial=init,
+                         qn_dispatches=qn_sim.dispatch_count() - d0)
 
     # ---------------------------------------------------------- fast mode
     def run_fast(self, frontier_span: int = 64) -> RunReport:
-        """Beyond-paper: AMVA frontier proposes, QN verifies, HC polishes."""
+        """Beyond-paper: AMVA frontier proposes, QN verifies, HC polishes.
+
+        With the batched evaluator the verification is ONE fused QN call
+        over the window around the AMVA proposal (instead of a scalar probe
+        loop): typically 1-2 simulator dispatches per class, total."""
         t0 = time.time()
+        d0 = qn_sim.dispatch_count()
         init = initial_solution(self.problem)
         sols: Dict[str, ClassSolution] = {}
         traces: Dict[str, HCTrace] = {}
@@ -87,14 +118,15 @@ class DSpace4Cloud:
             feas = np.where(ts <= cls.deadline_ms)[0]
             nu_star = (lo + int(feas[0])) if len(feas) else hi
             tr = HCTrace(cls=cls.name)
-            sols[cls.name] = optimize_class(cls, vm, nu_star, self.evaluate,
-                                            trace=tr)
+            sols[cls.name] = refine_class(cls, vm, nu_star, self.evaluate,
+                                          window=self.window, trace=tr)
             traces[cls.name] = tr
         evals = sum(t.evals for t in traces.values())
         return RunReport(solutions=sols,
                          total_cost_per_h=solution_cost(sols),
                          wall_s=time.time() - t0, evals=evals,
-                         traces=traces, initial=init)
+                         traces=traces, initial=init,
+                         qn_dispatches=qn_sim.dispatch_count() - d0)
 
     # ------------------------------------------------------------ file API
     @staticmethod

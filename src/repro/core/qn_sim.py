@@ -23,6 +23,7 @@ against the detailed trace-replay simulator in ``cluster_sim.py``).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from functools import partial
 from typing import Tuple
@@ -68,12 +69,20 @@ def _init_state(key, think_ms, h_users: int, max_slots: int):
 
 def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
                max_slots: int, n_events: int, warmup_jobs: int,
-               m_samples=None, r_samples=None):
+               m_samples=None, r_samples=None, n_events_active=None):
     """``m_samples``/``r_samples``: optional empirical task-duration lists —
     the JMT *replayer* mode the paper uses (service times drawn from logged
-    durations instead of exponentials)."""
+    durations instead of exponentials).
+
+    ``n_events_active``: optional traced per-config event budget.  The scan
+    length stays static (padded across a batch), but steps with
+    ``i >= n_events_active`` become no-ops and the completion-key fold offset
+    uses the *logical* budget — so a config padded inside a batch produces
+    bit-for-bit the random stream of a scalar run with ``n_events`` equal to
+    its own logical budget."""
     slot_enabled = jnp.arange(max_slots) < slots_cap
     replay = m_samples is not None
+    fold_base = n_events if n_events_active is None else n_events_active
 
     def step(state, i):
         s = state
@@ -111,6 +120,11 @@ def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
         t_think = jnp.min(s["think_end"])
         b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
         b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
+        if n_events_active is not None:          # padded batch: mask tail
+            active = i < n_events_active
+            b_dispatch = b_dispatch & active
+            b_complete = b_complete & active
+            b_think = b_think & active
 
         # completion
         cslot = jnp.argmin(s["slot_end"])
@@ -128,7 +142,7 @@ def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
         # reduce stage done -> job completes, back to think
         job_done = stage_done & (~was_map)
         resp = t_slot - s["job_start"][cu]
-        kq = jax.random.fold_in(key, i + n_events)
+        kq = jax.random.fold_in(key, i + fold_base)
         new_think = t_slot + jax.random.exponential(kq) * think_ms
         c_think = s["think_end"].at[cu].set(
             jnp.where(job_done, new_think, s["think_end"][cu]))
@@ -182,14 +196,15 @@ def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
 
 def _sim(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
          h_users: int, max_slots: int, n_events: int, warmup_jobs: int,
-         seed, m_samples=None, r_samples=None):
+         seed, m_samples=None, r_samples=None, n_events_active=None):
     """Core simulator.  Static: h_users, max_slots, n_events, warmup_jobs.
     Traced: everything else (so configs can be vmapped)."""
     key = jax.random.key(seed)
     state = _init_state(key, think_ms, h_users, max_slots)
     step = _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms,
                       slots_cap, max_slots, n_events, warmup_jobs,
-                      m_samples=m_samples, r_samples=r_samples)
+                      m_samples=m_samples, r_samples=r_samples,
+                      n_events_active=n_events_active)
     state, _ = jax.lax.scan(step, state, jnp.arange(n_events))
     mean_resp = state["resp_sum"] / jnp.maximum(state["resp_cnt"], 1.0)
     return mean_resp, state["resp_cnt"]
@@ -213,8 +228,64 @@ def _sim_replay_jit(n_map, n_reduce, think_ms, slots_cap, seed,
                 m_samples=m_samples, r_samples=r_samples)
 
 
+@partial(jax.jit, static_argnames=("h_users", "max_slots", "n_events",
+                                   "warmup_jobs"))
+def _sim_batch_jit(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+                   n_events_active, m_samples, r_samples, *,
+                   h_users, max_slots, n_events, warmup_jobs):
+    """One fused device program over a flat (candidate x replication) batch.
+    All per-config parameters are (B,) arrays; replay sample lists (when
+    given) are shared across the batch (in_axes=None)."""
+    def one(nm, nr, ma, ra, tm, sc, sd, nea):
+        return _sim(nm, nr, ma, ra, tm, sc, h_users, max_slots, n_events,
+                    warmup_jobs, sd, m_samples=m_samples,
+                    r_samples=r_samples, n_events_active=nea)
+    return jax.vmap(one)(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
+                         seed, n_events_active)
+
+
+# ---------------------------------------------------------------------------
+# Device-dispatch accounting (benchmarks/batched_qn.py measures the batched
+# path's dispatch reduction against the scalar path with these).  The hill
+# climber probes classes from a thread pool, so the counter takes a lock.
+# ---------------------------------------------------------------------------
+
+_DISPATCHES = 0
+_DISPATCH_LOCK = threading.Lock()
+
+
+def _count_dispatch(n: int = 1) -> None:
+    global _DISPATCHES
+    with _DISPATCH_LOCK:
+        _DISPATCHES += n
+
+
+def dispatch_count() -> int:
+    """Total simulator device dispatches issued by this process so far."""
+    return _DISPATCHES
+
+
+def reset_dispatch_count() -> None:
+    global _DISPATCHES
+    with _DISPATCH_LOCK:
+        _DISPATCHES = 0
+
+
 def _pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _combine(means, cnts) -> Tuple[float, float]:
+    """Count-weighted mean across replications, in host float64.
+
+    Shared by the scalar and batched paths — the bit-exact parity contract
+    of ``response_time_batch`` requires one combination rule.  Returns
+    (inf, 0.0) when no replication completed a job."""
+    good = [(float(m), float(c)) for m, c in zip(means, cnts) if c > 0]
+    if not good:
+        return float("inf"), 0.0
+    tot = sum(c for _, c in good)
+    return sum(m * c for m, c in good) / tot, tot
 
 
 def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
@@ -225,6 +296,7 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
     outs = []
     cnts = []
     for r in range(replications):
+        _count_dispatch()
         m, c = _sim_jit(
             jnp.int32(p.n_map), jnp.int32(p.n_reduce),
             jnp.float32(p.m_avg), jnp.float32(p.r_avg),
@@ -233,11 +305,7 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
             n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
         outs.append(float(m))
         cnts.append(float(c))
-    good = [(m, c) for m, c in zip(outs, cnts) if c > 0]
-    if not good:
-        return float("inf"), 0.0
-    tot = sum(c for _, c in good)
-    return sum(m * c for m, c in good) / tot, tot
+    return _combine(outs, cnts)
 
 
 def events_needed(p: QNParams, min_jobs: int = 40) -> int:
@@ -267,14 +335,102 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
     rs = jnp.asarray(np.asarray(r_samples, np.float32))
     outs, cnts = [], []
     for r in range(replications):
+        _count_dispatch()
         m, c = _sim_replay_jit(
             jnp.int32(p.n_map), jnp.int32(p.n_reduce),
             jnp.float32(p.think_ms), jnp.int32(p.slots), p.seed + 1000 * r,
             ms, rs, h_users=p.h_users, max_slots=_pow2(p.slots),
             n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
         outs.append(float(m)); cnts.append(float(c))
-    good = [(m, c) for m, c in zip(outs, cnts) if c > 0]
-    if not good:
-        return float("inf")
-    tot = sum(c for _, c in good)
-    return sum(m * c for m, c in good) / tot
+    return _combine(outs, cnts)[0]
+
+
+def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
+                        h_users: int, slots, min_jobs: int = 40,
+                        warmup_jobs: int = 10, seed: int = 0,
+                        replications: int = 2,
+                        m_samples=None, r_samples=None) -> np.ndarray:
+    """Batched ``response_time``: one fused device dispatch for a whole
+    candidate sweep.
+
+    ``n_map``/``n_reduce``/``m_avg``/``r_avg``/``think_ms``/``slots`` are
+    scalars or broadcastable 1-D arrays over C candidates (so a call can mix
+    a nu frontier with several VM types' profiles at once); ``h_users`` is a
+    single static int — the batch is per concurrency level, which is fixed
+    within an application class.  The simulator is vmapped over the flat
+    (candidate x replication) axis with ``max_slots`` and the event budget
+    padded to the batch maximum; each candidate still runs with its *own*
+    logical event budget (masked tail + matching RNG fold offset), so the
+    result for every candidate is numerically identical to a scalar
+    ``response_time`` call with the same seed.
+
+    When ``m_samples``/``r_samples`` are given the whole batch runs in JMT
+    replayer mode with the shared empirical duration lists.
+
+    Returns a float64 array of shape (C,) of mean response times [ms]
+    (``inf`` where no replication completed a job).
+    """
+    shape = np.broadcast_shapes(*(np.shape(np.asarray(x)) for x in
+                                  (n_map, n_reduce, m_avg, r_avg,
+                                   think_ms, slots)))
+    C = int(np.prod(shape, dtype=np.int64)) if shape else 1
+
+    def _b(x, dt):
+        return np.broadcast_to(np.asarray(x, dt), (C,)).copy()
+
+    nm = _b(n_map, np.int64)
+    nr = _b(n_reduce, np.int64)
+    ma = _b(m_avg, np.float32)
+    ra = _b(r_avg, np.float32)
+    tk = _b(think_ms, np.float32)
+    sl = _b(slots, np.int64)
+
+    # Per-candidate logical event budget — identical to the scalar path's
+    # events_needed + pow2 bucketing, so padded runs reproduce scalar runs.
+    n_ev = np.empty((C,), np.int64)
+    for c in range(C):
+        p = QNParams(n_map=int(nm[c]), n_reduce=int(nr[c]), m_avg=0.0,
+                     r_avg=0.0, think_ms=0.0, h_users=h_users,
+                     slots=int(sl[c]), warmup_jobs=warmup_jobs)
+        n_ev[c] = _pow2(events_needed(p, min_jobs))
+    scan_len = int(n_ev.max())
+    max_slots = _pow2(int(sl.max()))
+
+    # Pad the candidate axis to a power of two (replicating the last
+    # candidate) so sweeps of nearby widths share one compiled program —
+    # vmap lanes are independent, so results for real candidates are
+    # unchanged; padded lanes are dropped below.
+    C_pad = _pow2(C)
+    if C_pad > C:
+        pad = lambda x: np.concatenate(
+            [x, np.repeat(x[-1:], C_pad - C, axis=0)])
+        nm, nr, ma, ra, tk, sl, n_ev = map(
+            pad, (nm, nr, ma, ra, tk, sl, n_ev))
+
+    R = replications
+    seeds = seed + 1000 * np.tile(np.arange(R, dtype=np.int64), C_pad)
+    rep = lambda x: np.repeat(x, R)
+
+    if m_samples is not None:
+        ms = jnp.asarray(np.asarray(m_samples, np.float32))
+        rs = jnp.asarray(np.asarray(r_samples, np.float32))
+        ma = np.zeros_like(ma)      # replay mode ignores the profile means
+        ra = np.zeros_like(ra)
+    else:
+        ms = rs = None
+
+    _count_dispatch()
+    mean, cnt = _sim_batch_jit(
+        jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
+        jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
+        jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),
+        jnp.asarray(rep(n_ev), jnp.int32), ms, rs,
+        h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
+        warmup_jobs=warmup_jobs)
+    mean = np.asarray(mean, np.float64).reshape(C_pad, R)[:C]
+    cnt = np.asarray(cnt, np.float64).reshape(C_pad, R)[:C]
+
+    out = np.full((C,), np.inf)
+    for c in range(C):      # same float64 combination as the scalar path
+        out[c] = _combine(mean[c], cnt[c])[0]
+    return out

@@ -1,0 +1,153 @@
+"""Batched QN sweep: strict scalar parity + evaluator/HC semantics.
+
+The contract of ``qn_sim.response_time_batch`` is that padding (max_slots,
+event budget, pow2 candidate axis) is *invisible*: for the same seed every
+candidate produces exactly the scalar ``response_time`` estimate.  These
+tests pin that contract across a parameter grid, the degenerate
+single-server case (cross-checked against exact MVA), replay mode, and the
+cache/dispatch semantics of ``BatchedQNEvaluator``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import qn_sim
+from repro.core.evaluators import make_batched_qn_evaluator, make_qn_evaluator
+from repro.core.hillclimb import optimize_class, sweep_class
+from repro.core.mva import mva_response
+from repro.core.problem import ApplicationClass, JobProfile, VMType
+
+FAST = dict(min_jobs=10, warmup_jobs=4, replications=2)
+
+
+def _scalar(nus, **kw):
+    return np.array([qn_sim.response_time(slots=int(s), **kw) for s in nus])
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("h_users,n_map,n_reduce", [
+    (1, 4, 1), (3, 16, 4), (6, 48, 12),
+])
+def test_batched_matches_scalar_grid(h_users, n_map, n_reduce):
+    kw = dict(n_map=n_map, n_reduce=n_reduce, m_avg=1200.0, r_avg=500.0,
+              think_ms=9000.0, h_users=h_users, seed=11, **FAST)
+    nus = np.array([2, 3, 5, 9, 17])            # non-pow2 count -> padded
+    assert np.array_equal(_scalar(nus, **kw),
+                          qn_sim.response_time_batch(slots=nus, **kw))
+
+
+def test_batched_matches_scalar_heterogeneous_profiles():
+    # different (n_map, n_reduce) per candidate => different logical event
+    # budgets inside one padded batch (the multi-VM sweep case)
+    nm = np.array([6, 40, 120])
+    nr = np.array([2, 10, 30])
+    sl = np.array([6, 24, 48])
+    kw = dict(m_avg=1000.0, r_avg=400.0, think_ms=7000.0, h_users=3,
+              seed=5, **FAST)
+    scalar = np.array([
+        qn_sim.response_time(n_map=int(a), n_reduce=int(b), slots=int(s),
+                             **kw) for a, b, s in zip(nm, nr, sl)])
+    batched = qn_sim.response_time_batch(n_map=nm, n_reduce=nr, slots=sl,
+                                         **kw)
+    assert np.array_equal(scalar, batched)
+
+
+def test_batched_replay_matches_scalar():
+    rng = np.random.default_rng(2)
+    ms = rng.exponential(700.0, 96).astype(np.float32)
+    rs = rng.exponential(250.0, 96).astype(np.float32)
+    kw = dict(n_map=12, n_reduce=3, m_avg=0.0, r_avg=0.0, think_ms=5000.0,
+              h_users=2, seed=9, m_samples=ms, r_samples=rs, **FAST)
+    nus = np.array([3, 6, 12])
+    assert np.array_equal(_scalar(nus, **kw),
+                          qn_sim.response_time_batch(slots=nus, **kw))
+
+
+def test_batched_single_server_matches_mva():
+    # degenerate 1 map + tiny reduce on 1 slot == single-queue closed
+    # network: the batch must agree with exact MVA like the scalar sim does
+    t = qn_sim.response_time_batch(
+        n_map=1, n_reduce=1, m_avg=1000.0, r_avg=1.0, think_ms=10_000.0,
+        h_users=5, slots=np.array([1]), min_jobs=400, warmup_jobs=50,
+        seed=1, replications=3)[0]
+    assert t == pytest.approx(mva_response(1001.0, 10_000.0, 5), rel=0.08)
+
+
+# ----------------------------------------------------------- evaluators
+
+PROF = JobProfile(n_map=32, n_reduce=8, m_avg=1500, m_max=3000,
+                  r_avg=700, r_max=1500)
+VM = VMType(name="vm", cores=4, sigma=0.05, pi=0.20)
+CLS = ApplicationClass(name="c0", h_users=3, think_ms=8000.0,
+                       deadline_ms=45_000.0, eta=0.25,
+                       profiles={"vm": PROF})
+
+
+def test_batched_evaluator_matches_scalar_evaluator():
+    scalar_eval = make_qn_evaluator(min_jobs=10, warmup_jobs=4,
+                                    replications=2, seed=3)
+    batched_eval = make_batched_qn_evaluator(min_jobs=10, warmup_jobs=4,
+                                             replications=2, seed=3)
+    nus = [2, 4, 7]
+    ts = batched_eval.evaluate_frontier(CLS, VM, nus)
+    for nu, t in zip(nus, ts):
+        assert t == scalar_eval(CLS, VM, nu)
+        assert batched_eval(CLS, VM, nu) == t      # cache hit, same value
+
+
+def test_batched_evaluator_cache_gather_skips_known_points():
+    ev = make_batched_qn_evaluator(min_jobs=10, warmup_jobs=4,
+                                   replications=1, seed=0)
+    ev.evaluate_frontier(CLS, VM, [4, 5, 6])
+    calls0, pts0 = ev.device_calls, ev.points_evaluated
+    ts = ev.evaluate_frontier(CLS, VM, [3, 4, 5, 6, 7])   # 3 and 7 missing
+    assert ev.device_calls == calls0 + 1
+    assert ev.points_evaluated == pts0 + 2
+    assert len(ts) == 5
+    ev.evaluate_frontier(CLS, VM, [4, 6])                 # fully cached
+    assert ev.device_calls == calls0 + 1
+
+
+def test_evaluate_many_fuses_vm_types():
+    vm2 = VMType(name="vm2", cores=8, sigma=0.09, pi=0.35, speed=1.2)
+    cls = ApplicationClass(name="c1", h_users=3, think_ms=8000.0,
+                           deadline_ms=45_000.0,
+                           profiles={"vm": PROF, "_ref": PROF})
+    ev = make_batched_qn_evaluator(min_jobs=10, warmup_jobs=4,
+                                   replications=1, seed=0)
+    items = [(cls, VM, 4), (cls, vm2, 3), (cls, VM, 8)]
+    ts = ev.evaluate_many(items)
+    assert ev.device_calls == 1                   # one fused dispatch
+    ref = make_qn_evaluator(min_jobs=10, warmup_jobs=4, replications=1,
+                            seed=0)
+    assert ts == [ref(c, v, n) for c, v, n in items]
+
+
+# ------------------------------------------------------------ hill climb
+
+def test_sweep_class_matches_pointwise_on_deterministic_evaluator():
+    class Frontier:
+        def __init__(self):
+            self.calls = 0
+
+        def evaluate_frontier(self, cls, vm, nus):
+            self.calls += 1
+            return np.array([240_000.0 / n for n in nus])
+
+        def __call__(self, cls, vm, nu):
+            return 240_000.0 / nu
+
+    cls = ApplicationClass(name="c", h_users=4, think_ms=10_000,
+                           deadline_ms=30_000, eta=0.25,
+                           profiles={"vm": PROF})
+    ev = Frontier()
+    for nu0 in (2, 8, 30):                       # infeasible/at/feasible
+        swept = sweep_class(cls, VM, nu0, ev, window=16)
+        point = optimize_class(cls, VM, nu0, ev)
+        assert swept.nu == point.nu == 8         # 240000/8 == deadline
+        assert swept.feasible
+    assert ev.calls <= 9                         # windows, not point probes
+
+    # incumbent beyond the catalog bound: clamped, not an empty window
+    over = sweep_class(cls, VM, 9000, ev, window=16, max_nu=8192)
+    assert over.nu == 8 and over.feasible

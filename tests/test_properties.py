@@ -2,6 +2,8 @@
 plus conservation properties of the simulators."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cluster_sim import WorkloadSpec, simulate_cluster
