@@ -1,16 +1,39 @@
-"""Shared benchmark utilities: CSV emission + result capture."""
+"""Shared benchmark utilities: CSV emission + machine-readable capture.
+
+Every ``emit()`` both prints the ``name,us_per_call,derived`` CSV line and
+writes ``results/BENCH_<name>.json`` so the perf trajectory is tracked
+across PRs (compare the files between commits instead of scraping CI
+logs).  ``metrics`` takes any extra structured numbers a benchmark wants
+recorded alongside the headline.
+"""
 from __future__ import annotations
 
 import json
 import os
 import time
 from pathlib import Path
+from typing import Optional
 
 RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results"))
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str,
+         metrics: Optional[dict] = None) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    payload = {"name": name, "us_per_call": us_per_call, "derived": derived,
+               "unix_time": time.time()}
+    if metrics:
+        payload["metrics"] = metrics
+    save_json(f"BENCH_{name}", payload)
+
+
+def emit_error(name: str, err: Exception) -> None:
+    """Benchmark crashed: keep the CSV line AND the JSON trail honest."""
+    derived = f"ERROR:{type(err).__name__}:{err}"
+    print(f"{name},0.0,{derived}")
+    save_json(f"BENCH_{name}", {"name": name, "us_per_call": 0.0,
+                                "derived": derived, "error": True,
+                                "unix_time": time.time()})
 
 
 def save_json(name: str, obj) -> Path:

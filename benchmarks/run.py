@@ -1,5 +1,7 @@
 """Benchmark harness — one entry per paper table/figure + the TPU-framework
-beyond-paper tables.  Prints ``name,us_per_call,derived`` CSV lines.
+beyond-paper tables.  Prints ``name,us_per_call,derived`` CSV lines and
+writes one machine-readable ``results/BENCH_<name>.json`` per benchmark
+(via ``common.emit``), so the perf trajectory is diffable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run           # quick defaults
     PYTHONPATH=src python -m benchmarks.run --full    # full grids
@@ -12,6 +14,8 @@ from __future__ import annotations
 import argparse
 import sys
 import traceback
+
+from benchmarks.common import emit_error
 
 
 def main() -> None:
@@ -28,6 +32,7 @@ def main() -> None:
         hc_convergence,
         kernel_microbench,
         roofline_report,
+        service_throughput,
         serving_qn_validation,
         table3_qn_validation,
         tpu_capacity_plan,
@@ -37,6 +42,7 @@ def main() -> None:
         "cost_deadline": lambda: cost_deadline.run(quick=quick),
         "hc_convergence": lambda: hc_convergence.run(quick=quick),
         "batched_qn": lambda: batched_qn.run(quick=quick),
+        "service_throughput": lambda: service_throughput.run(quick=quick),
         "tpu_capacity_plan": lambda: tpu_capacity_plan.run(quick=quick),
         "roofline_report": lambda: roofline_report.run(quick=quick),
         "kernel_microbench": lambda: kernel_microbench.run(quick=quick),
@@ -54,7 +60,7 @@ def main() -> None:
             fn()
         except Exception as e:  # keep the harness going; report at the end
             failures.append((name, e))
-            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            emit_error(name, e)
             traceback.print_exc()
     if failures:
         sys.exit(1)

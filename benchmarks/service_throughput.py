@@ -1,0 +1,134 @@
+"""Multi-tenant service throughput: N concurrent jobs vs N solo runs.
+
+Eight tenants submit one capacity-planning problem each (shared workload
+family — same concurrency level, per-tenant profiles and deadlines).  Three
+measurements:
+
+  1. solo baseline: each job solved by its own ``DSpace4Cloud.run()``
+     (simulator dispatches + wall time per job; their sum is what a naive
+     service would pay);
+  2. concurrent service: all jobs submitted to one ``SolverService`` —
+     cross-job fusion must keep total dispatches <= 2x the worst SINGLE
+     job (vs ~8x for the naive loop), with every job's final deployment
+     and per-point response-time estimates bit-identical to its solo run
+     (asserted);
+  3. warm-cache resubmission: a fresh service on the spilled cache re-runs
+     all eight jobs with ZERO new dispatches (asserted).
+
+Usage: PYTHONPATH=src python -m benchmarks.service_throughput [--quick]
+"""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, save_json, timer
+from repro.core import qn_sim
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+from repro.service import SolverService
+
+N_JOBS = 8
+VM = VMType(name="m4.xlarge", cores=4, sigma=0.07, pi=0.22,
+            containers_per_core=2)
+
+
+def tenant_problem(i: int) -> Problem:
+    """Tenant i's problem: same workload family (fusable h_users), own
+    profile scale and deadline (own optimum)."""
+    prof = JobProfile(n_map=32, n_reduce=8,
+                      m_avg=1200.0 + 100.0 * i, m_max=2 * (1200 + 100 * i),
+                      r_avg=600.0 + 40.0 * i, r_max=2 * (600 + 40 * i))
+    cls = ApplicationClass(name=f"tenant-{i}", h_users=3, think_ms=8000.0,
+                           deadline_ms=35_000.0 + 5_000.0 * i, eta=0.3,
+                           profiles={VM.name: prof})
+    return Problem(classes=[cls], vm_types=[VM])
+
+
+def _job_equal(rep_a, rep_b) -> bool:
+    """Same final deployment AND same per-point estimates (trace moves)."""
+    if rep_a.solutions != rep_b.solutions:
+        return False
+    return all(rep_a.traces[k].moves == rep_b.traces[k].moves
+               for k in rep_a.traces)
+
+
+def run(quick: bool = False):
+    kw = dict(min_jobs=8 if quick else 25, replications=1 if quick else 2,
+              seed=0)
+    window = 8
+    problems = [tenant_problem(i) for i in range(N_JOBS)]
+
+    # ------------------------------------------------------- solo baseline
+    solo_reports, solo_dispatches, solo_walls = [], [], []
+    for prob in problems:
+        d0 = qn_sim.dispatch_count()
+        with timer() as t:
+            solo_reports.append(
+                DSpace4Cloud(prob, batched=True, window=window, **kw).run())
+        solo_dispatches.append(qn_sim.dispatch_count() - d0)
+        solo_walls.append(t.s)
+
+    # --------------------------------------------------- concurrent service
+    spill = str(RESULTS_DIR / "service_eval_cache.json")
+    if os.path.exists(spill):
+        os.remove(spill)                     # measure a genuinely cold start
+    svc = SolverService(window=window, cache_path=spill)
+    jids = [svc.submit(p, **kw) for p in problems]
+    d0 = qn_sim.dispatch_count()
+    qn0 = qn_sim.sim_stats()
+    with timer() as t_service:
+        jobs = svc.run_until_complete()
+    service_dispatches = qn_sim.dispatch_count() - d0
+    qn = {k: v - qn0[k] for k, v in qn_sim.sim_stats().items()}
+
+    parity = all(_job_equal(jobs[jid].report, rep)
+                 for jid, rep in zip(jids, solo_reports))
+    assert parity, "service results diverged from solo runs"
+    assert service_dispatches <= 2 * max(solo_dispatches), \
+        f"{service_dispatches} dispatches > 2x single-job " \
+        f"{max(solo_dispatches)}"
+
+    # ------------------------------------------------ warm-cache resubmit
+    svc2 = SolverService(window=window, cache_path=spill)  # fresh process
+    jids2 = [svc2.submit(p, **kw) for p in problems]
+    d0 = qn_sim.dispatch_count()
+    with timer() as t_warm:
+        jobs2 = svc2.run_until_complete()
+    warm_dispatches = qn_sim.dispatch_count() - d0
+    assert warm_dispatches == 0, f"warm cache re-dispatched {warm_dispatches}"
+    assert all(_job_equal(jobs2[jid].report, rep)
+               for jid, rep in zip(jids2, solo_reports))
+
+    stats = svc.stats()
+    out = {
+        "n_jobs": N_JOBS,
+        "solo": {"dispatches_total": sum(solo_dispatches),
+                 "dispatches_max_single": max(solo_dispatches),
+                 "wall_s_total": sum(solo_walls)},
+        "service": {"dispatches": service_dispatches,
+                    "wall_s": t_service.s,
+                    "rounds": stats["rounds"],
+                    "scheduler": stats["scheduler"],
+                    "cache": stats["cache"],
+                    "padding_efficiency": (
+                        qn["events_useful"] / max(qn["events_total"], 1))},
+        "warm": {"dispatches": warm_dispatches, "wall_s": t_warm.s,
+                 "cache_hit_rate": svc2.cache.hit_rate},
+        "parity": parity,
+    }
+    save_json("service_throughput", out)
+    emit("service_throughput",
+         t_service.s / N_JOBS * 1e6,
+         f"dispatches_solo={sum(solo_dispatches)}"
+         f"(max_single={max(solo_dispatches)})->service="
+         f"{service_dispatches};warm={warm_dispatches};"
+         f"hit_rate={svc2.cache.hit_rate:.2f};"
+         f"wall_solo={sum(solo_walls):.1f}s->service={t_service.s:.1f}s;"
+         f"parity={parity}",
+         metrics=out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -61,6 +61,35 @@ def make_qn_evaluator(min_jobs: int = 40, warmup_jobs: int = 8,
     return evaluate
 
 
+def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
+                  h_users: int, slots: Sequence[int], *,
+                  min_jobs: int = 40, warmup_jobs: int = 8,
+                  replications: int = 2, seed: int = 0,
+                  m_samples=None, r_samples=None) -> np.ndarray:
+    """ONE fused simulator dispatch over heterogeneous points of a fusion
+    group (shared ``h_users``, replay lists, and simulation parameters).
+
+    ``profs``/``think_ms``/``slots`` are aligned per-point sequences; the
+    points may come from different classes, VM types — or, in the service,
+    different tenants' jobs.  Each vmap lane runs with its own logical event
+    budget and seed, so every returned estimate is bit-identical to a scalar
+    ``qn_sim.response_time`` call for the same point (the parity contract of
+    ``response_time_batch``).  This is the single marshaling point both
+    ``BatchedQNEvaluator`` and ``repro.service.scheduler`` dispatch through.
+    """
+    return qn_sim.response_time_batch(
+        n_map=np.asarray([p.n_map for p in profs], np.int64),
+        n_reduce=np.asarray([p.n_reduce for p in profs], np.int64),
+        m_avg=np.asarray([p.m_avg for p in profs], np.float32),
+        r_avg=np.asarray([p.r_avg for p in profs], np.float32),
+        think_ms=np.asarray(think_ms, np.float32),
+        h_users=int(h_users),
+        slots=np.asarray(slots, np.int64),
+        min_jobs=min_jobs, warmup_jobs=warmup_jobs,
+        seed=seed, replications=replications,
+        m_samples=m_samples, r_samples=r_samples)
+
+
 class BatchedQNEvaluator:
     """QN-tier evaluator that amortizes device dispatches over candidate
     sweeps.
@@ -125,16 +154,11 @@ class BatchedQNEvaluator:
             ms = rs = None
             if replay is not None:
                 ms, rs = self.samples[replay]
-            ts = qn_sim.response_time_batch(
-                n_map=np.asarray([p.n_map for p in profs], np.int64),
-                n_reduce=np.asarray([p.n_reduce for p in profs], np.int64),
-                m_avg=np.asarray([p.m_avg for p in profs], np.float32),
-                r_avg=np.asarray([p.r_avg for p in profs], np.float32),
-                think_ms=np.asarray([items[i][0].think_ms for i in idxs],
-                                    np.float32),
-                h_users=h_users,
-                slots=np.asarray([int(items[i][2]) * items[i][1].slots
-                                  for i in idxs], np.int64),
+            ts = fused_qn_call(
+                profs,
+                [items[i][0].think_ms for i in idxs],
+                h_users,
+                [int(items[i][2]) * items[i][1].slots for i in idxs],
                 min_jobs=self.min_jobs, warmup_jobs=self.warmup_jobs,
                 seed=self.seed, replications=self.replications,
                 m_samples=ms, r_samples=rs)

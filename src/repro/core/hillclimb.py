@@ -93,14 +93,21 @@ def optimize_class(cls: ApplicationClass, vm: VMType, nu0: int,
     return _solution(cls, vm, nu, t)
 
 
-def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
-                evaluator, *, window: int = 16, max_nu: int = 8192,
-                stall_windows: int = 2,
-                trace: Optional[HCTrace] = None) -> ClassSolution:
-    """Frontier-sweep Algorithm 1 for one class.
+def sweep_requests(cls: ApplicationClass, vm: VMType, nu0: int, *,
+                   window: int = 16, max_nu: int = 8192,
+                   stall_windows: int = 2,
+                   trace: Optional[HCTrace] = None):
+    """Resumable propose/receive core of the frontier sweep.
 
-    Each round evaluates a contiguous window of nu candidates in ONE fused
-    device call and moves in window-sized strides:
+    A generator that *proposes* each window as a list of nu candidates
+    (``yield nus``), *receives* the aligned response-time array via
+    ``send(ts)``, and finally returns the ``ClassSolution`` (as the
+    ``StopIteration`` value).  It never evaluates anything itself — whoever
+    drives it owns dispatch timing, which is what lets the multi-tenant
+    service fuse windows from many concurrent jobs into shared device calls
+    (``repro.service.scheduler``).  ``sweep_class`` is the single-job driver.
+
+    Move semantics (identical in every driver):
 
       * some point feasible -> take the smallest feasible nu (cost is
         strictly increasing in nu, so that is the window's minimum-cost
@@ -110,14 +117,6 @@ def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
         aborting after ``stall_windows`` consecutive windows whose best
         response time improves by <0.5% (response floored above deadline —
         no cluster size will help).
-
-    ``evaluator`` must expose ``evaluate_frontier(cls, vm, nus)`` (see
-    ``BatchedQNEvaluator``); cached points cost nothing to re-sweep.
-    Reaches the same fixed point as the point-wise walk whenever the
-    evaluator is monotone non-increasing in nu; under simulation noise it
-    may legitimately land within a point or two of it (it takes the global
-    window minimum where the scalar walk stops at the first infeasible
-    probe).
     """
     t_start = time.time()
     tr = trace if trace is not None else HCTrace(cls=cls.name)
@@ -131,7 +130,7 @@ def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
     stall = 0
     while True:
         nus = list(range(lo, hi + 1))
-        ts = evaluator.evaluate_frontier(cls, vm, nus)
+        ts = yield nus
         tr.evals += len(nus)
         for n, t in zip(nus, ts):
             tr.moves.append((n, float(t), bool(t <= cls.deadline_ms)))
@@ -163,6 +162,33 @@ def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
 
     tr.wall_s = time.time() - t_start
     return _solution(cls, vm, best[0], best[1])
+
+
+def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
+                evaluator, *, window: int = 16, max_nu: int = 8192,
+                stall_windows: int = 2,
+                trace: Optional[HCTrace] = None) -> ClassSolution:
+    """Frontier-sweep Algorithm 1 for one class (single-job driver of
+    ``sweep_requests``): each proposed window is satisfied immediately with
+    one fused device call.
+
+    ``evaluator`` must expose ``evaluate_frontier(cls, vm, nus)`` (see
+    ``BatchedQNEvaluator``); cached points cost nothing to re-sweep.
+    Reaches the same fixed point as the point-wise walk whenever the
+    evaluator is monotone non-increasing in nu; under simulation noise it
+    may legitimately land within a point or two of it (it takes the global
+    window minimum where the scalar walk stops at the first infeasible
+    probe).
+    """
+    gen = sweep_requests(cls, vm, nu0, window=window, max_nu=max_nu,
+                         stall_windows=stall_windows, trace=trace)
+    ts = None
+    while True:
+        try:
+            nus = gen.send(ts) if ts is not None else next(gen)
+        except StopIteration as stop:
+            return stop.value
+        ts = evaluator.evaluate_frontier(cls, vm, nus)
 
 
 def refine_class(cls: ApplicationClass, vm: VMType, nu0: int,

@@ -29,10 +29,21 @@ from repro.core.evaluators import (
     make_qn_evaluator,
     mva_evaluator,
 )
-from repro.core.hillclimb import HCTrace, hill_climb, refine_class
+from repro.core.hillclimb import HCTrace, hill_climb, refine_class, \
+    sweep_requests
 from repro.core.milp import initial_solution
 from repro.core.pricing import optimal_mix
-from repro.core.problem import ClassSolution, Problem, solution_cost
+from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
+    VMType, solution_cost
+
+
+@dataclass
+class EvalRequest:
+    """One pending window of a resumable run: evaluate ``nus`` for
+    (``cls``, ``vm``) and send the aligned response times back."""
+    cls: ApplicationClass
+    vm: VMType
+    nus: list
 
 
 @dataclass
@@ -57,6 +68,18 @@ class RunReport:
         }, indent=1)
 
 
+def _report(sols: Dict[str, ClassSolution], traces: Dict[str, HCTrace],
+            init: Dict[str, ClassSolution], t0: float, d0: int) -> RunReport:
+    """Shared epilogue of every gait: one place assembles the report, so
+    all entry points stay consistent on metadata/accounting."""
+    return RunReport(solutions=sols,
+                     total_cost_per_h=solution_cost(sols),
+                     wall_s=time.time() - t0,
+                     evals=sum(t.evals for t in traces.values()),
+                     traces=traces, initial=init,
+                     qn_dispatches=qn_sim.dispatch_count() - d0)
+
+
 class DSpace4Cloud:
     """The tool: optimization scenario of Figure 3.
 
@@ -75,27 +98,95 @@ class DSpace4Cloud:
                  batched: bool = True, window: int = 16):
         self.problem = problem
         self.window = window
+        self.batched = batched
         self._qn_cache: dict = {}
         maker = make_batched_qn_evaluator if batched else make_qn_evaluator
         self.evaluate = maker(
             min_jobs=min_jobs, replications=replications, seed=seed,
             cache=self._qn_cache, samples=samples)
 
-    # ------------------------------------------------------------- classic
-    def run(self, parallel: bool = True) -> RunReport:
-        """MINLP-tier initial solution + QN-driven HC (Algorithm 1; the
-        window-sweep gait when the evaluator is batched)."""
+    # ----------------------------------------------------- resumable steps
+    def run_steps(self):
+        """Resumable propose/receive form of ``run()`` (batched gait).
+
+        A generator over scheduling rounds: each round *yields* the list of
+        pending ``EvalRequest`` windows (one per still-converging class) and
+        expects ``send()`` of a ``{class_name: response_time_array}`` dict
+        covering every yielded request.  Returns the ``RunReport`` as the
+        ``StopIteration`` value.  The caller owns dispatch timing — ``run()``
+        satisfies each round with one fused ``evaluate_many`` call, while the
+        multi-tenant service interleaves rounds of many jobs so their windows
+        share device dispatches (``repro.service``).
+
+        The report's ``qn_dispatches``/``wall_s`` are measured across this
+        job's lifetime from the process-wide counter and clock: exact for a
+        solo driver, but under a shared scheduler they include activity of
+        concurrently-solved jobs (a fused dispatch lands in every
+        overlapping job's delta) — use ``SolverService.stats()`` for
+        service-level dispatch accounting.
+        """
         t0 = time.time()
         d0 = qn_sim.dispatch_count()
         init = initial_solution(self.problem)
-        sols, traces = hill_climb(self.problem, init, self.evaluate,
-                                  parallel=parallel, window=self.window)
-        evals = sum(t.evals for t in traces.values())
-        return RunReport(solutions=sols,
-                         total_cost_per_h=solution_cost(sols),
-                         wall_s=time.time() - t0, evals=evals,
-                         traces=traces, initial=init,
-                         qn_dispatches=qn_sim.dispatch_count() - d0)
+        gens: Dict[str, tuple] = {}
+        pending: Dict[str, EvalRequest] = {}
+        sols: Dict[str, ClassSolution] = {}
+        traces: Dict[str, HCTrace] = {}
+        for cls in self.problem.classes:
+            vm = self.problem.vm_by_name(init[cls.name].vm_type)
+            tr = HCTrace(cls=cls.name)
+            traces[cls.name] = tr
+            g = sweep_requests(cls, vm, init[cls.name].nu,
+                               window=self.window, trace=tr)
+            # sweep_requests always proposes at least one window before
+            # returning, so the first next() cannot raise StopIteration
+            pending[cls.name] = EvalRequest(cls=cls, vm=vm, nus=next(g))
+            gens[cls.name] = (g, cls, vm)
+        while pending:
+            results = yield list(pending.values())
+            nxt: Dict[str, EvalRequest] = {}
+            for name, req in pending.items():
+                g, cls, vm = gens[name]
+                try:
+                    nus = g.send(np.asarray(results[name]))
+                    nxt[name] = EvalRequest(cls=cls, vm=vm, nus=nus)
+                except StopIteration as stop:
+                    sols[name] = stop.value
+            pending = nxt
+        return _report(sols, traces, init, t0, d0)
+
+    # ------------------------------------------------------------- classic
+    def run(self, parallel: bool = True) -> RunReport:
+        """MINLP-tier initial solution + QN-driven HC (Algorithm 1; the
+        window-sweep gait when the evaluator is batched).
+
+        In batched mode this drives ``run_steps``: every scheduling round's
+        windows — across ALL classes — are satisfied with one
+        ``evaluate_many`` call, so classes sharing a fusion group
+        (``h_users``, replay lists) also share device dispatches within a
+        single run.  ``parallel`` only affects the point-wise scalar gait."""
+        if not self.batched:
+            t0 = time.time()
+            d0 = qn_sim.dispatch_count()
+            init = initial_solution(self.problem)
+            sols, traces = hill_climb(self.problem, init, self.evaluate,
+                                      parallel=parallel, window=self.window)
+            return _report(sols, traces, init, t0, d0)
+
+        gen = self.run_steps()
+        results = None
+        while True:
+            try:
+                reqs = gen.send(results) if results is not None \
+                    else next(gen)
+            except StopIteration as stop:
+                return stop.value
+            flat = [(r.cls, r.vm, int(nu)) for r in reqs for nu in r.nus]
+            ts = self.evaluate.evaluate_many(flat)
+            results, at = {}, 0
+            for r in reqs:
+                results[r.cls.name] = np.asarray(ts[at:at + len(r.nus)])
+                at += len(r.nus)
 
     # ---------------------------------------------------------- fast mode
     def run_fast(self, frontier_span: int = 64) -> RunReport:
@@ -121,12 +212,7 @@ class DSpace4Cloud:
             sols[cls.name] = refine_class(cls, vm, nu_star, self.evaluate,
                                           window=self.window, trace=tr)
             traces[cls.name] = tr
-        evals = sum(t.evals for t in traces.values())
-        return RunReport(solutions=sols,
-                         total_cost_per_h=solution_cost(sols),
-                         wall_s=time.time() - t0, evals=evals,
-                         traces=traces, initial=init,
-                         qn_dispatches=qn_sim.dispatch_count() - d0)
+        return _report(sols, traces, init, t0, d0)
 
     # ------------------------------------------------------------ file API
     @staticmethod

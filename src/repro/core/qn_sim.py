@@ -246,29 +246,50 @@ def _sim_batch_jit(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
 
 # ---------------------------------------------------------------------------
 # Device-dispatch accounting (benchmarks/batched_qn.py measures the batched
-# path's dispatch reduction against the scalar path with these).  The hill
-# climber probes classes from a thread pool, so the counter takes a lock.
+# path's dispatch reduction against the scalar path with these).  Beyond raw
+# dispatches the counters track vmap lanes and simulated events — including
+# the padding overhead (pow2 candidate axis, scan length padded to the batch
+# maximum) that the service's admission control exists to keep profitable.
+# The hill climber probes classes from a thread pool, so updates take a lock.
 # ---------------------------------------------------------------------------
 
-_DISPATCHES = 0
+_SIM_STATS = {"dispatches": 0, "lanes": 0, "padded_lanes": 0,
+              "events_total": 0, "events_useful": 0}
 _DISPATCH_LOCK = threading.Lock()
 
 
-def _count_dispatch(n: int = 1) -> None:
-    global _DISPATCHES
+def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
+                    events_total: int = 0, events_useful: int = 0) -> None:
     with _DISPATCH_LOCK:
-        _DISPATCHES += n
+        _SIM_STATS["dispatches"] += n
+        _SIM_STATS["lanes"] += n if lanes is None else lanes
+        _SIM_STATS["padded_lanes"] += padded_lanes
+        _SIM_STATS["events_total"] += events_total
+        _SIM_STATS["events_useful"] += events_useful
 
 
 def dispatch_count() -> int:
     """Total simulator device dispatches issued by this process so far."""
-    return _DISPATCHES
+    return _SIM_STATS["dispatches"]
+
+
+def sim_stats() -> dict:
+    """Process-wide simulator counters: ``dispatches`` (device calls),
+    ``lanes`` (vmapped candidate x replication programs, incl. pow2
+    padding), ``padded_lanes`` (lanes that were pure padding), and the
+    scan-step totals ``events_total`` vs ``events_useful`` (logical budgets
+    only) — their ratio is the batch-padding efficiency."""
+    with _DISPATCH_LOCK:
+        return dict(_SIM_STATS)
 
 
 def reset_dispatch_count() -> None:
-    global _DISPATCHES
     with _DISPATCH_LOCK:
-        _DISPATCHES = 0
+        for k in _SIM_STATS:
+            _SIM_STATS[k] = 0
+
+
+reset_sim_stats = reset_dispatch_count
 
 
 def _pow2(n: int) -> int:
@@ -296,13 +317,14 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
     outs = []
     cnts = []
     for r in range(replications):
-        _count_dispatch()
+        ne = _pow2(p.n_events)
+        _count_dispatch(events_total=ne, events_useful=ne)
         m, c = _sim_jit(
             jnp.int32(p.n_map), jnp.int32(p.n_reduce),
             jnp.float32(p.m_avg), jnp.float32(p.r_avg),
             jnp.float32(p.think_ms), jnp.int32(p.slots), p.seed + 1000 * r,
             h_users=p.h_users, max_slots=_pow2(p.slots),
-            n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
+            n_events=ne, warmup_jobs=p.warmup_jobs)
         outs.append(float(m))
         cnts.append(float(c))
     return _combine(outs, cnts)
@@ -313,6 +335,19 @@ def events_needed(p: QNParams, min_jobs: int = 40) -> int:
     per job, times jobs; padded 1.5x."""
     per_job = 2 * (p.n_map + p.n_reduce) + 4
     return int(1.5 * per_job * (min_jobs + p.warmup_jobs))
+
+
+def padded_event_budget(n_map: int, n_reduce: int, *, min_jobs: int = 40,
+                        warmup_jobs: int = 10) -> int:
+    """The pow2-bucketed logical event budget one (candidate, replication)
+    lane costs — what ``response_time``/``response_time_batch`` will actually
+    scan for this profile.  The budget depends only on the task counts and
+    the job quota, so admission control can price a request without knowing
+    the candidate nu yet."""
+    p = QNParams(n_map=int(n_map), n_reduce=int(n_reduce), m_avg=0.0,
+                 r_avg=0.0, think_ms=0.0, h_users=1, slots=1,
+                 warmup_jobs=warmup_jobs)
+    return _pow2(events_needed(p, min_jobs))
 
 
 def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
@@ -335,7 +370,8 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
     rs = jnp.asarray(np.asarray(r_samples, np.float32))
     outs, cnts = [], []
     for r in range(replications):
-        _count_dispatch()
+        ne = _pow2(p.n_events)
+        _count_dispatch(events_total=ne, events_useful=ne)
         m, c = _sim_replay_jit(
             jnp.int32(p.n_map), jnp.int32(p.n_reduce),
             jnp.float32(p.think_ms), jnp.int32(p.slots), p.seed + 1000 * r,
@@ -389,10 +425,9 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     # events_needed + pow2 bucketing, so padded runs reproduce scalar runs.
     n_ev = np.empty((C,), np.int64)
     for c in range(C):
-        p = QNParams(n_map=int(nm[c]), n_reduce=int(nr[c]), m_avg=0.0,
-                     r_avg=0.0, think_ms=0.0, h_users=h_users,
-                     slots=int(sl[c]), warmup_jobs=warmup_jobs)
-        n_ev[c] = _pow2(events_needed(p, min_jobs))
+        n_ev[c] = padded_event_budget(int(nm[c]), int(nr[c]),
+                                      min_jobs=min_jobs,
+                                      warmup_jobs=warmup_jobs)
     scan_len = int(n_ev.max())
     max_slots = _pow2(int(sl.max()))
 
@@ -419,7 +454,10 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     else:
         ms = rs = None
 
-    _count_dispatch()
+    _count_dispatch(
+        lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
+        events_total=scan_len * C_pad * R,
+        events_useful=int(n_ev[:C].sum()) * R)
     mean, cnt = _sim_batch_jit(
         jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
         jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),

@@ -1,0 +1,222 @@
+"""The multi-tenant solver service: job queue + cooperative solver pool.
+
+``SolverService`` accepts capacity-planning problems (JSON or ``Problem``
+objects), runs many ``DSpace4Cloud`` optimizations *cooperatively* — all
+active jobs advance in lockstep scheduling rounds so their QN window
+requests coexist in flight — and fuses every round's windows across jobs
+into shared device dispatches (``FusionScheduler``).  Admission control
+bounds the concurrent in-flight event budget; the shared ``EvalCache``
+makes repeat tenants with overlapping catalogs warm-start, across jobs and
+across process restarts.
+
+One scheduling round (``step()``)::
+
+    admit from queue  ->  collect pending windows of every active job
+                      ->  FusionScheduler.flush()   (shared device calls)
+                      ->  deliver results, advance each job's run_steps()
+                      ->  retire finished jobs (DONE / INFEASIBLE / FAILED)
+
+Throughput scales sub-linearly in dispatches: N similar concurrent jobs
+cost about as many fused dispatches as the slowest single job alone
+(benchmarks/service_throughput.py).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core import qn_sim
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import Problem
+from repro.service.admission import ADMIT, SHED, AdmissionController, \
+    estimate_job_events
+from repro.service.cache import EvalCache
+from repro.service.jobs import Job, JobState, parse_submission
+from repro.service.scheduler import FusionScheduler, SimSpec, WindowRequest
+
+
+class SolverService:
+    """Concurrent capacity-planning service (in-process event loop).
+
+    ``cache_path`` enables the persistent spill: an existing file is
+    warm-loaded, and ``save_cache()`` (called automatically by
+    ``run_until_complete``) writes it back.
+    """
+
+    def __init__(self, *, cache: Optional[EvalCache] = None,
+                 cache_path: Optional[str] = None,
+                 admission: Optional[AdmissionController] = None,
+                 window: int = 16, max_rounds: int = 10_000):
+        self.cache = cache if cache is not None else EvalCache(cache_path)
+        self.scheduler = FusionScheduler(self.cache)
+        self.admission = admission if admission is not None \
+            else AdmissionController()
+        self.window = window
+        self.max_rounds = max_rounds
+        self.rounds = 0
+        self._jobs: Dict[str, Job] = {}
+        self._queue: List[str] = []
+        self._active: List[str] = []
+        self._seq = itertools.count()
+
+    # -------------------------------------------------------------- intake
+    def submit(self, problem: Union[Problem, str], *, min_jobs: int = 40,
+               warmup_jobs: int = 8, replications: int = 2, seed: int = 0,
+               samples=None, window: Optional[int] = None,
+               tag: Optional[str] = None) -> str:
+        """Queue one problem; returns the job id immediately.  ``problem``
+        may be a ``Problem`` or a JSON submission (whose ``solver`` section
+        overrides the keyword defaults)."""
+        kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
+                  replications=replications, seed=seed)
+        if isinstance(problem, str):
+            problem, overrides = parse_submission(problem)
+            tag = overrides.pop("tag", tag)
+            window = overrides.pop("window", window)
+            unknown = set(overrides) - set(kw)
+            if unknown:                   # reject cleanly at intake, not as
+                raise ValueError(         # a TypeError from SimSpec(**kw)
+                    f"unknown solver option(s) {sorted(unknown)}; "
+                    f"valid: {sorted(kw)} + ['window', 'tag']")
+            kw.update(overrides)
+        spec = SimSpec(**kw)
+        job = Job(id=f"job-{next(self._seq):04d}", problem=problem,
+                  spec=spec, window=window or self.window,
+                  samples=samples, tag=tag)
+        job.events_estimate = estimate_job_events(
+            problem, window=job.window, min_jobs=spec.min_jobs,
+            warmup_jobs=spec.warmup_jobs, replications=spec.replications)
+        self._jobs[job.id] = job
+        if self.admission.accept_submission(len(self._queue)):
+            self._queue.append(job.id)
+        else:
+            job.state = JobState.SHED
+            job.finished_s = time.time()
+        return job.id
+
+    # ----------------------------------------------------------- admission
+    def _admit(self) -> None:
+        """FIFO admission: queued jobs are offered in submission order and
+        the first DEFER verdict stops the scan — later submissions never
+        jump an earlier waiting job.  Under continuous traffic this is what
+        guarantees a deferred (e.g. oversize) job eventually sees the
+        in-flight budget it is waiting for instead of starving behind a
+        stream of smaller newcomers."""
+        admitted_until = 0
+        for i, jid in enumerate(self._queue):
+            job = self._jobs[jid]
+            verdict = self.admission.try_admit(jid, job.events_estimate)
+            if verdict == ADMIT:
+                self._activate(job)
+            elif verdict == SHED:
+                job.state = JobState.SHED
+                job.finished_s = time.time()
+            else:
+                admitted_until = i
+                break
+            admitted_until = i + 1
+        self._queue = self._queue[admitted_until:]
+
+    def _activate(self, job: Job) -> None:
+        job.state = JobState.SOLVING
+        job.started_s = time.time()
+        # the facade's own evaluator stays idle here: run_steps() proposes
+        # windows and this engine satisfies them through the FusionScheduler
+        # and the shared content-addressed cache
+        tool = DSpace4Cloud(job.problem, min_jobs=job.spec.min_jobs,
+                            replications=job.spec.replications,
+                            seed=job.spec.seed, samples=job.samples,
+                            batched=True, window=job.window)
+        job._gen = tool.run_steps()
+        try:
+            job._pending = next(job._gen)
+            self._active.append(job.id)
+        except StopIteration as stop:       # no classes to converge
+            self._finish(job, stop.value)
+        except Exception as e:              # e.g. no feasible initial point
+            self._fail(job, e)
+
+    # ------------------------------------------------------------ stepping
+    def step(self) -> bool:
+        """One cooperative scheduling round; True while work remains."""
+        self._admit()
+        if not self._active:
+            return bool(self._queue)
+        self.rounds += 1
+
+        requests: Dict[str, List[WindowRequest]] = {}
+        for jid in self._active:
+            job = self._jobs[jid]
+            reqs = []
+            for er in job._pending:
+                req = WindowRequest(
+                    job_id=jid, cls=er.cls, vm=er.vm,
+                    nus=[int(n) for n in er.nus], spec=job.spec,
+                    samples=job.samples_for(er.cls.name, er.vm.name))
+                self.scheduler.submit(req)
+                reqs.append(req)
+            requests[jid] = reqs
+
+        self.scheduler.flush()
+
+        for jid in list(self._active):
+            job = self._jobs[jid]
+            results = {r.cls.name: r.result for r in requests[jid]}
+            try:
+                job._pending = job._gen.send(results)
+            except StopIteration as stop:
+                self._active.remove(jid)
+                self._finish(job, stop.value)
+            except Exception as e:
+                self._active.remove(jid)
+                self._fail(job, e)
+        return bool(self._queue or self._active)
+
+    def _finish(self, job: Job, report) -> None:
+        job.report = report
+        job.finished_s = time.time()
+        feasible = all(s.feasible for s in report.solutions.values())
+        job.state = JobState.DONE if feasible else JobState.INFEASIBLE
+        self.admission.release(job.id)
+
+    def _fail(self, job: Job, err: Exception) -> None:
+        job.state = JobState.FAILED
+        job.error = f"{type(err).__name__}: {err}"
+        job.finished_s = time.time()
+        self.admission.release(job.id)
+
+    def run_until_complete(self, max_rounds: Optional[int] = None
+                           ) -> Dict[str, Job]:
+        """Drive rounds until every submitted job settles; spills the cache
+        if a path is configured.  Returns all jobs by id."""
+        limit = max_rounds or self.max_rounds
+        rounds = 0
+        while self.step():
+            rounds += 1
+            if rounds > limit:
+                raise RuntimeError(
+                    f"service did not settle within {limit} rounds "
+                    f"(queued={len(self._queue)}, active={len(self._active)})")
+        if self.cache.path:
+            self.cache.save()
+        return dict(self._jobs)
+
+    # ------------------------------------------------------------- results
+    def job(self, job_id: str) -> Job:
+        return self._jobs[job_id]
+
+    def result(self, job_id: str) -> dict:
+        return self._jobs[job_id].summary()
+
+    def stats(self) -> dict:
+        states: Dict[str, int] = {}
+        for job in self._jobs.values():
+            states[job.state] = states.get(job.state, 0) + 1
+        return {"jobs": states, "rounds": self.rounds,
+                "scheduler": self.scheduler.stats(),
+                "cache": self.cache.stats(),
+                "admission": self.admission.stats.as_dict(),
+                "qn": qn_sim.sim_stats()}

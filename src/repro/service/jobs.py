@@ -1,0 +1,85 @@
+"""Job model of the solver service: per-tenant request state.
+
+A job is one capacity-planning ``Problem`` plus the simulation parameters
+its tenant asked for.  Lifecycle::
+
+    QUEUED --admission--> SOLVING --> DONE | INFEASIBLE
+       |                     |
+       +--> SHED             +--> FAILED
+
+``INFEASIBLE`` still carries a full report — it means the optimizer
+converged but at least one class cannot meet its deadline at any admitted
+cluster size (the paper's "negative answer is an answer" case).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.optimizer import RunReport
+from repro.core.problem import Problem
+from repro.service.scheduler import SimSpec
+
+
+class JobState:
+    QUEUED = "queued"
+    SOLVING = "solving"
+    DONE = "done"
+    INFEASIBLE = "infeasible"
+    SHED = "shed"
+    FAILED = "failed"
+
+
+@dataclass
+class Job:
+    id: str
+    problem: Problem
+    spec: SimSpec
+    window: int = 16
+    samples: Optional[Dict[Tuple[str, str], tuple]] = None
+    tag: Optional[str] = None
+    state: str = JobState.QUEUED
+    submitted_s: float = field(default_factory=time.time)
+    started_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    report: Optional[RunReport] = None
+    error: Optional[str] = None
+    events_estimate: int = 0
+    # engine internals: the resumable run generator + its pending windows
+    _gen: object = None
+    _pending: list = None
+
+    def samples_for(self, cls_name: str, vm_name: str):
+        if self.samples and (cls_name, vm_name) in self.samples:
+            return self.samples[(cls_name, vm_name)]
+        return None
+
+    def summary(self) -> dict:
+        out = {"id": self.id, "state": self.state, "tag": self.tag,
+               "classes": len(self.problem.classes),
+               "events_estimate": self.events_estimate,
+               "submitted_s": self.submitted_s,
+               "started_s": self.started_s, "finished_s": self.finished_s,
+               "error": self.error}
+        if self.report is not None:
+            out["total_cost_per_h"] = self.report.total_cost_per_h
+            out["solutions"] = {k: v.as_dict()
+                                for k, v in self.report.solutions.items()}
+        return out
+
+
+def parse_submission(text: str) -> Tuple[Problem, dict]:
+    """Decode one JSON submission: ``{"problem": {...}, "solver": {...}}``
+    (or a bare problem document).  Returns the problem and the solver
+    keyword overrides (min_jobs, warmup_jobs, replications, seed, window,
+    tag)."""
+    raw = json.loads(text)
+    if "problem" in raw:
+        solver = dict(raw.get("solver") or {})
+        problem = Problem.from_json(json.dumps(raw["problem"]))
+    else:
+        solver = {}
+        problem = Problem.from_json(text)
+    return problem, solver

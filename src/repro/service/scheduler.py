@@ -1,0 +1,161 @@
+"""Cross-job fusion scheduler: shared device dispatches for all tenants.
+
+Each scheduling round, every active job proposes the windows its classes
+want next (the resumable ``DSpace4Cloud.run_steps`` protocol).  The
+scheduler collects them ALL, resolves what it can from the shared
+``EvalCache``, groups the remaining points by *fusion key* — the invariants
+one ``qn_sim.response_time_batch`` program requires all its lanes to share:
+
+    (h_users, replay-sample digest, min_jobs, warmup_jobs,
+     replications, seed)
+
+— deduplicates identical points (two tenants probing the same
+configuration cost one lane), and issues ONE fused device call per group
+through the same ``fused_qn_call`` marshaling the single-job evaluator
+uses.  Because every vmap lane runs with its own logical event budget and
+per-replication seed, each point's estimate is bit-identical to what the
+job's solo run would have computed — fusion changes dispatch *timing*,
+never values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.evaluators import fused_qn_call
+from repro.core.problem import ApplicationClass, VMType
+from repro.service.cache import CacheKey, EvalCache, profile_hash, \
+    samples_digest
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """Simulation parameters one fused program must agree on (these default
+    to the single-job evaluator defaults, so service runs reproduce solo
+    runs bit-for-bit)."""
+    min_jobs: int = 40
+    warmup_jobs: int = 8
+    replications: int = 2
+    seed: int = 0
+
+
+@dataclass
+class WindowRequest:
+    """One job's pending window, annotated with its simulation context."""
+    job_id: str
+    cls: ApplicationClass
+    vm: VMType
+    nus: List[int]
+    spec: SimSpec
+    samples: Optional[Tuple] = None      # replay (m_list, r_list) or None
+    result: Optional[np.ndarray] = None  # filled by flush(), aligned to nus
+
+
+@dataclass
+class FlushReport:
+    groups: int = 0                 # fusion groups with >= 1 cache miss
+    points: int = 0                 # points requested this flush
+    points_dispatched: int = 0      # unique misses sent to the device
+    points_cached: int = 0          # served from the shared cache
+    points_deduped: int = 0         # duplicate misses folded into one lane
+
+
+class FusionScheduler:
+    """Collects ``WindowRequest``s and resolves them in fused batches."""
+
+    def __init__(self, cache: Optional[EvalCache] = None):
+        self.cache = cache if cache is not None else EvalCache()
+        self._pending: List[WindowRequest] = []
+        # (job_id, cls, vm) -> (profile digest, samples digest): invariant
+        # per job, so hash once instead of every scheduling round (replay
+        # sample lists can be thousands of floats)
+        self._digests: Dict[tuple, tuple] = {}
+        self.fused_dispatches = 0
+        self.points_requested = 0
+        self.points_dispatched = 0
+        self.last_flush = FlushReport()
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: WindowRequest) -> None:
+        self._pending.append(req)
+        self.points_requested += len(req.nus)
+
+    def _digest(self, req: WindowRequest) -> tuple:
+        """(profile digest, samples digest) shared by every nu of one
+        request (nu and seed are separate key components, so one hash pair
+        covers the window) — memoized per (job, class, vm)."""
+        mkey = (req.job_id, req.cls.name, req.vm.name)
+        got = self._digests.get(mkey)
+        if got is None:
+            sdig = samples_digest(req.samples)
+            got = (profile_hash(req.cls.profile_for(req.vm),
+                                req.cls.think_ms, req.cls.h_users,
+                                req.vm.slots, min_jobs=req.spec.min_jobs,
+                                warmup_jobs=req.spec.warmup_jobs,
+                                replications=req.spec.replications,
+                                samples=req.samples), sdig)
+            self._digests[mkey] = got
+        return got
+
+    # -------------------------------------------------------------- flush
+    def flush(self) -> List[WindowRequest]:
+        """Resolve every pending request: gather cache hits, fuse the
+        misses into one device call per fusion group, fill ``req.result``
+        for all requests, and return them."""
+        pending, self._pending = self._pending, []
+        rep = FlushReport()
+
+        # point -> (prof, think, slots) by cache key, grouped by fusion key
+        todo: Dict[tuple, Dict[CacheKey, tuple]] = {}
+        keys: Dict[int, List[CacheKey]] = {}       # id(req) -> keys per nu
+        for req in pending:
+            prof = req.cls.profile_for(req.vm)
+            digest, sdig = self._digest(req)
+            fkey = (req.cls.h_users, sdig, req.spec)
+            keys[id(req)] = kl = []
+            for nu in req.nus:
+                ck: CacheKey = (digest, req.vm.name, int(nu), req.spec.seed)
+                kl.append(ck)
+                rep.points += 1
+                if self.cache.lookup(ck) is not None:
+                    rep.points_cached += 1
+                    continue
+                group = todo.setdefault(fkey, {})
+                if ck in group:
+                    rep.points_deduped += 1
+                else:
+                    group[ck] = (prof, req.cls.think_ms,
+                                 int(nu) * req.vm.slots, req.samples)
+
+        for (h_users, _sdig, spec), group in todo.items():
+            cks = list(group)
+            profs = [group[k][0] for k in cks]
+            think = [group[k][1] for k in cks]
+            slots = [group[k][2] for k in cks]
+            samples = group[cks[0]][3]
+            ms, rs = samples if samples is not None else (None, None)
+            ts = fused_qn_call(profs, think, h_users, slots,
+                               min_jobs=spec.min_jobs,
+                               warmup_jobs=spec.warmup_jobs,
+                               replications=spec.replications,
+                               seed=spec.seed, m_samples=ms, r_samples=rs)
+            for ck, t in zip(cks, ts):
+                self.cache.put(ck, float(t))
+            rep.groups += 1
+            rep.points_dispatched += len(cks)
+
+        for req in pending:
+            req.result = np.array(
+                [self.cache.get(k) for k in keys[id(req)]], np.float64)
+
+        self.fused_dispatches += rep.groups
+        self.points_dispatched += rep.points_dispatched
+        self.last_flush = rep
+        return pending
+
+    def stats(self) -> dict:
+        return {"fused_dispatches": self.fused_dispatches,
+                "points_requested": self.points_requested,
+                "points_dispatched": self.points_dispatched}

@@ -108,6 +108,35 @@ def test_batched_evaluator_cache_gather_skips_known_points():
     assert ev.device_calls == calls0 + 1
 
 
+def test_scalar_and_batched_evaluators_share_one_cache_both_ways():
+    # docs/evaluators.md promises the two evaluators are drop-in
+    # interchangeable over ONE cache dict; pin both directions:
+    shared = {}
+    scalar = make_qn_evaluator(min_jobs=10, warmup_jobs=4, replications=1,
+                               seed=0, cache=shared)
+    batched = make_batched_qn_evaluator(min_jobs=10, warmup_jobs=4,
+                                        replications=1, seed=0, cache=shared)
+
+    # scalar -> batched: points the scalar evaluator computed never reach
+    # the device again through the batched one
+    t4 = scalar(CLS, VM, 4)
+    assert batched.evaluate_frontier(CLS, VM, [4])[0] == t4
+    assert batched.device_calls == 0 and batched.points_evaluated == 0
+
+    # batched -> scalar: a swept window serves later scalar probes with no
+    # new dispatches (process-wide counter stands still)
+    ts = batched.evaluate_frontier(CLS, VM, [5, 6, 7])
+    assert batched.device_calls == 1 and batched.points_evaluated == 3
+    d0 = qn_sim.dispatch_count()
+    for nu, t in zip([5, 6, 7], ts):
+        assert scalar(CLS, VM, nu) == t
+    assert qn_sim.dispatch_count() == d0
+
+    # a mixed sweep only pays for the genuinely new point
+    batched.evaluate_frontier(CLS, VM, [4, 5, 6, 7, 8])
+    assert batched.device_calls == 2 and batched.points_evaluated == 4
+
+
 def test_evaluate_many_fuses_vm_types():
     vm2 = VMType(name="vm2", cores=8, sigma=0.09, pi=0.35, speed=1.2)
     cls = ApplicationClass(name="c1", h_users=3, think_ms=8000.0,

@@ -1,10 +1,15 @@
-"""Reserved/spot mix optimality (P1h/P1i) — unit + hypothesis properties."""
+"""Reserved/spot mix optimality (P1h/P1i) — unit tests + edge cases run
+always; the hypothesis property tests skip cleanly when the package is
+absent (it is optional, see requirements-dev.txt)."""
 import math
 
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core.pricing import mix_cost, optimal_mix
 from repro.core.problem import VMType
@@ -24,25 +29,77 @@ def test_spot_not_cheaper():
     assert s == 0 and r == 10
 
 
-@given(nu=st.integers(0, 500), eta=st.floats(0.0, 0.9),
-       sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0))
-@settings(max_examples=200, deadline=None)
-def test_mix_invariants(nu, eta, sigma, pi):
-    vm = VMType(name="x", cores=2, sigma=sigma, pi=pi)
-    r, s, cost = optimal_mix(nu, eta, vm)
-    assert r + s == nu and r >= 0 and s >= 0
-    # constraint (P1h): s <= eta/(1-eta) * r  (within integer rounding)
-    if nu > 0 and eta < 1.0:
+# ------------------------------------------------------------- edge cases
+
+def test_eta_zero_forces_all_reserved():
+    for nu in (1, 7, 100):
+        r, s, cost = optimal_mix(nu, 0.0, VM)
+        assert s == 0 and r == nu
+        assert cost == pytest.approx(VM.pi * nu)
+
+
+def test_eta_one_allows_all_spot():
+    # eta = 1 makes the P1h bound vacuous (eta/(1-eta) -> inf): the whole
+    # fleet may ride spot and the cost floor is sigma * nu
+    for nu in (1, 7, 100):
+        r, s, cost = optimal_mix(nu, 1.0, VM)
+        assert s == nu and r == 0
+        assert cost == pytest.approx(VM.sigma * nu)
+
+
+def test_eta_near_one_spot_floor_respects_p1h():
+    # floor(eta * nu) must stay within s <= eta/(1-eta) * r even when the
+    # bound's slope explodes: at eta=0.99, nu=100 the split is exactly on
+    # the boundary (s=99 <= 99 * r=1)
+    eta = 0.99
+    r, s, cost = optimal_mix(100, eta, VM)
+    assert (r, s) == (1, 99)
+    assert s <= eta / (1.0 - eta) * r + 1e-9
+
+
+def test_nu_one_single_vm_is_reserved():
+    # a single VM cannot be fractionally spot: floor(eta * 1) = 0 for any
+    # eta < 1, so the P1h invariant holds trivially and cost is pi
+    for eta in (0.0, 0.3, 0.5, 0.9, 0.999):
+        r, s, cost = optimal_mix(1, eta, VM)
+        assert (r, s) == (1, 0)
+        assert cost == pytest.approx(VM.pi)
         assert s <= eta / (1.0 - eta) * r + 1e-9
-    # optimality: no cheaper admissible split exists
-    for s_alt in range(0, nu + 1):
-        r_alt = nu - s_alt
-        if s_alt <= eta * nu:
-            assert cost <= sigma * s_alt + pi * r_alt + 1e-9
 
 
-@given(eta=st.floats(0.0, 0.8))
-@settings(max_examples=50, deadline=None)
-def test_cost_monotone_in_nu(eta):
-    costs = [mix_cost(nu, eta, VM) for nu in range(0, 50)]
-    assert all(b >= a - 1e-12 for a, b in zip(costs, costs[1:]))
+def test_spot_floor_never_violates_p1h_dense_grid():
+    # the paper states P1h as s <= eta/(1-eta) * R; the floor() split must
+    # satisfy it for every (nu, eta) — including eta values just below the
+    # values where eta * nu is integral (floating-point boundary cases)
+    for nu in range(1, 60):
+        for k in range(0, nu + 1):
+            for eta in (k / nu, max(0.0, k / nu - 1e-12)):
+                if eta >= 1.0:
+                    continue
+                r, s, _ = optimal_mix(nu, eta, VM)
+                assert r + s == nu
+                assert s <= eta / (1.0 - eta) * r + 1e-9, (nu, eta, r, s)
+
+
+if HAVE_HYPOTHESIS:
+    @given(nu=st.integers(0, 500), eta=st.floats(0.0, 0.9),
+           sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_mix_invariants(nu, eta, sigma, pi):
+        vm = VMType(name="x", cores=2, sigma=sigma, pi=pi)
+        r, s, cost = optimal_mix(nu, eta, vm)
+        assert r + s == nu and r >= 0 and s >= 0
+        # constraint (P1h): s <= eta/(1-eta) * r (within integer rounding)
+        if nu > 0 and eta < 1.0:
+            assert s <= eta / (1.0 - eta) * r + 1e-9
+        # optimality: no cheaper admissible split exists
+        for s_alt in range(0, nu + 1):
+            r_alt = nu - s_alt
+            if s_alt <= eta * nu:
+                assert cost <= sigma * s_alt + pi * r_alt + 1e-9
+
+    @given(eta=st.floats(0.0, 0.8))
+    @settings(max_examples=50, deadline=None)
+    def test_cost_monotone_in_nu(eta):
+        costs = [mix_cost(nu, eta, VM) for nu in range(0, 50)]
+        assert all(b >= a - 1e-12 for a, b in zip(costs, costs[1:]))

@@ -1,0 +1,270 @@
+"""Multi-tenant solver service: solo parity, cross-job fusion, cache
+persistence, admission control, and the resumable run_steps protocol."""
+import numpy as np
+import pytest
+
+from repro.core import qn_sim
+from repro.core.hillclimb import sweep_class, sweep_requests
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+from repro.service import (
+    AdmissionController,
+    EvalCache,
+    JobState,
+    SolverService,
+    estimate_job_events,
+)
+
+PROF = JobProfile(n_map=8, n_reduce=2, m_avg=1500, m_max=3000,
+                  r_avg=700, r_max=1500)
+VM = VMType(name="vm", cores=2, sigma=0.05, pi=0.20)
+KW = dict(min_jobs=6, replications=1, seed=3)      # tiny but real QN sims
+
+
+def one_class_problem(deadline_ms, name="c", n_map=8):
+    prof = JobProfile(n_map=n_map, n_reduce=2, m_avg=1500, m_max=3000,
+                      r_avg=700, r_max=1500)
+    cls = ApplicationClass(name=name, h_users=2, think_ms=8000.0,
+                           deadline_ms=deadline_ms, eta=0.25,
+                           profiles={"vm": prof})
+    return Problem(classes=[cls], vm_types=[VM])
+
+
+# ------------------------------------------------------ resumable protocol
+
+def test_sweep_requests_generator_matches_sweep_class():
+    class Frontier:
+        def evaluate_frontier(self, cls, vm, nus):
+            return np.array([240_000.0 / n for n in nus])
+
+    cls = ApplicationClass(name="c", h_users=4, think_ms=10_000,
+                           deadline_ms=30_000, eta=0.25,
+                           profiles={"vm": PROF})
+    ev = Frontier()
+    for nu0 in (2, 8, 30):
+        gen = sweep_requests(cls, VM, nu0, window=16)
+        nus = next(gen)
+        while True:
+            try:
+                nus = gen.send(ev.evaluate_frontier(cls, VM, nus))
+            except StopIteration as stop:
+                manual = stop.value
+                break
+        assert manual == sweep_class(cls, VM, nu0, ev, window=16)
+        assert manual.nu == 8
+
+
+def test_run_steps_returns_report_equal_to_run():
+    prob = one_class_problem(45_000.0)
+    rep_run = DSpace4Cloud(prob, batched=True, window=4, **KW).run()
+
+    tool = DSpace4Cloud(prob, batched=True, window=4, **KW)
+    gen = tool.run_steps()
+    reqs = next(gen)
+    while True:
+        results = {r.cls.name: tool.evaluate.evaluate_frontier(
+            r.cls, r.vm, r.nus) for r in reqs}
+        try:
+            reqs = gen.send(results)
+        except StopIteration as stop:
+            rep_steps = stop.value
+            break
+    assert rep_steps.solutions == rep_run.solutions
+    assert rep_steps.evals == rep_run.evals
+
+
+# ------------------------------------------------------- service vs. solo
+
+def test_service_matches_solo_runs_and_fuses_dispatches():
+    deadlines = (30_000.0, 45_000.0, 60_000.0)
+    solo = {}
+    for dl in deadlines:
+        d0 = qn_sim.dispatch_count()
+        rep = DSpace4Cloud(one_class_problem(dl), batched=True,
+                           window=4, **KW).run()
+        solo[dl] = (rep, qn_sim.dispatch_count() - d0)
+
+    svc = SolverService(window=4)
+    jids = {dl: svc.submit(one_class_problem(dl), **KW) for dl in deadlines}
+    d0 = qn_sim.dispatch_count()
+    jobs = svc.run_until_complete()
+    d_service = qn_sim.dispatch_count() - d0
+
+    # every job identical to its solo run: deployment AND per-point probes
+    for dl, jid in jids.items():
+        job = jobs[jid]
+        rep_solo, _ = solo[dl]
+        assert job.state == JobState.DONE
+        assert job.report.solutions == rep_solo.solutions
+        for name in rep_solo.traces:
+            assert job.report.traces[name].moves == \
+                rep_solo.traces[name].moves
+    # cross-job fusion: all three jobs share each round's device call
+    assert d_service <= 2 * max(d for _, d in solo.values())
+    assert svc.scheduler.fused_dispatches <= max(d for _, d in solo.values())
+
+
+def test_warm_cache_resubmission_needs_zero_dispatches(tmp_path):
+    spill = str(tmp_path / "cache.json")
+    svc = SolverService(window=4, cache_path=spill)
+    svc.submit(one_class_problem(45_000.0), **KW)
+    svc.run_until_complete()
+    assert len(svc.cache) > 0
+
+    # fresh service (process restart) on the same spill path
+    svc2 = SolverService(window=4, cache_path=spill)
+    jid = svc2.submit(one_class_problem(45_000.0), **KW)
+    d0 = qn_sim.dispatch_count()
+    jobs = svc2.run_until_complete()
+    assert qn_sim.dispatch_count() - d0 == 0
+    assert svc2.scheduler.fused_dispatches == 0
+    assert jobs[jid].state == JobState.DONE
+    assert svc2.cache.hit_rate == 1.0
+
+
+def test_cross_tenant_name_collisions_do_not_share_results():
+    # same class/VM names, different profiles => different content hashes
+    svc = SolverService(window=4)
+    j1 = svc.submit(one_class_problem(60_000.0, name="prod", n_map=8), **KW)
+    j2 = svc.submit(one_class_problem(60_000.0, name="prod", n_map=16), **KW)
+    jobs = svc.run_until_complete()
+    t1 = jobs[j1].report.solutions["prod"]
+    t2 = jobs[j2].report.solutions["prod"]
+    assert t1.predicted_ms != t2.predicted_ms or t1.nu != t2.nu
+
+
+def test_infeasible_job_reported_as_infeasible():
+    # deadline the optimistic analytic tier admits but the QN tier cannot
+    # meet at any swept size: HC gives up, the negative verdict stands
+    prob = one_class_problem(3_500.0)
+    svc = SolverService(window=4)
+    jid = svc.submit(prob, **KW)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].state == JobState.INFEASIBLE
+    assert jobs[jid].report is not None
+
+
+def test_submission_json_roundtrip():
+    prob = one_class_problem(45_000.0)
+    import json
+    doc = json.dumps({"problem": json.loads(prob.to_json()),
+                      "solver": {"min_jobs": 6, "replications": 1,
+                                 "seed": 3, "window": 4, "tag": "t1"}})
+    svc = SolverService()
+    jid = svc.submit(doc)
+    job = svc.job(jid)
+    assert job.tag == "t1" and job.window == 4
+    assert job.spec.min_jobs == 6 and job.spec.seed == 3
+    jobs = svc.run_until_complete()
+    assert jobs[jid].state == JobState.DONE
+    assert "total_cost_per_h" in svc.result(jid)
+
+
+# ------------------------------------------------------------- admission
+
+def test_admission_serializes_jobs_under_tight_budget():
+    # three tenants with *distinct* profiles (no shared cache keys); budget
+    # sized for the costliest single job => they must run one at a time
+    probs = [one_class_problem(45_000.0, n_map=n) for n in (8, 10, 12)]
+    one_job = max(estimate_job_events(p, window=4, min_jobs=6,
+                                      warmup_jobs=8, replications=1)
+                  for p in probs)
+    adm = AdmissionController(max_inflight_events=one_job)
+    svc = SolverService(window=4, admission=adm)
+    for p in probs:
+        svc.submit(p, **KW)
+    jobs = svc.run_until_complete()
+    assert all(j.state == JobState.DONE for j in jobs.values())
+    assert adm.stats.deferred > 0
+    assert adm.stats.peak_inflight_events <= one_job
+    # serialized jobs cannot fuse across each other
+    assert svc.scheduler.fused_dispatches >= 3
+
+
+def test_admission_sheds_oversize_job_under_shed_policy():
+    adm = AdmissionController(max_inflight_events=10, policy="shed")
+    svc = SolverService(window=4, admission=adm)
+    jid = svc.submit(one_class_problem(45_000.0), **KW)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].state == JobState.SHED
+    assert adm.stats.shed == 1 and adm.stats.admitted == 0
+
+
+def test_admission_runs_oversize_job_alone_under_queue_policy():
+    adm = AdmissionController(max_inflight_events=10, policy="queue")
+    svc = SolverService(window=4, admission=adm)
+    jid = svc.submit(one_class_problem(45_000.0), **KW)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].state == JobState.DONE
+    assert adm.stats.oversize_admitted == 1
+
+
+def test_unknown_solver_option_rejected_at_intake():
+    import json
+    doc = json.dumps({"problem": json.loads(
+        one_class_problem(45_000.0).to_json()),
+        "solver": {"min_job": 6}})               # typo'd key
+    svc = SolverService()
+    with pytest.raises(ValueError, match="min_job"):
+        svc.submit(doc)
+
+
+def test_fifo_admission_blocks_queue_jumping():
+    # j2 is oversize (waits for solitude); j3 arrives later and fits, but
+    # FIFO admission must not let it jump ahead of j2
+    probs = {1: one_class_problem(30_000.0, n_map=8),
+             2: one_class_problem(45_000.0, n_map=40),
+             3: one_class_problem(60_000.0, n_map=8)}
+    small = max(estimate_job_events(probs[k], window=4, min_jobs=6,
+                                    warmup_jobs=8, replications=1)
+                for k in (1, 3))
+    adm = AdmissionController(max_inflight_events=small, policy="queue")
+    svc = SolverService(window=4, admission=adm)
+    jids = {k: svc.submit(probs[k], **KW) for k in (1, 2, 3)}
+    jobs = svc.run_until_complete()
+    assert all(j.state == JobState.DONE for j in jobs.values())
+    assert adm.stats.oversize_admitted == 1
+    # j3 only started once the oversize j2 got its solo slot
+    assert jobs[jids[3]].started_s >= jobs[jids[2]].started_s
+
+
+@pytest.mark.parametrize("policy", ["shed", "queue"])
+def test_max_queue_bounds_queue_length_under_both_policies(policy):
+    adm = AdmissionController(max_inflight_events=10**9, policy=policy,
+                              max_queue=1)
+    svc = SolverService(window=4, admission=adm)
+    j1 = svc.submit(one_class_problem(30_000.0), **KW)
+    j2 = svc.submit(one_class_problem(45_000.0), **KW)   # queue is full
+    assert svc.job(j1).state == JobState.QUEUED
+    assert svc.job(j2).state == JobState.SHED
+
+
+# ----------------------------------------------------------------- cache
+
+def test_eval_cache_spill_roundtrip(tmp_path):
+    path = str(tmp_path / "c.json")
+    c = EvalCache()
+    c.put(("d1", "vm", 3, 0), 123.5)
+    c.put(("d2", "vm", 4, 7), float("inf"))
+    c.save(path)
+    c2 = EvalCache(path)
+    assert c2.get(("d1", "vm", 3, 0)) == 123.5
+    assert c2.get(("d2", "vm", 4, 7)) == float("inf")
+    assert len(c2) == 2
+
+
+def test_failed_job_releases_admission_budget():
+    # no VM type can meet the deadline at any size the initial-solution
+    # builder admits -> initial_solution raises -> job FAILED, budget freed
+    prof = JobProfile(n_map=4, n_reduce=1, m_avg=1e9, m_max=2e9,
+                      r_avg=1e9, r_max=2e9)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=1000.0,
+                           deadline_ms=10.0, profiles={"vm": prof})
+    bad = Problem(classes=[cls], vm_types=[VM])
+    adm = AdmissionController()
+    svc = SolverService(window=4, admission=adm)
+    jid = svc.submit(bad, **KW)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].state == JobState.FAILED
+    assert jobs[jid].error
+    assert adm.stats.inflight_events == 0
