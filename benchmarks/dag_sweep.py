@@ -1,0 +1,123 @@
+"""Batched DAG frontier vs point-wise walk (the PR-3 workload plane).
+
+The DAG workload gets the same dispatch economics MapReduce got in PR 1,
+measured from day one.  On a 4-stage Spark-like class:
+
+  1. raw frontier throughput: a nu frontier evaluated point-by-point (one
+     XLA dispatch per point x replication via ``dag_response_time``) vs ONE
+     fused ``dag.response_time_batch`` call — wall time, dispatch counts,
+     and strict bit-exact parity (asserted, reported as a flag);
+  2. end-to-end optimizer: ``DSpace4Cloud.run`` on a one-class DAG problem
+     with the batched frontier evaluator vs the paper-verbatim point-wise
+     walk — simulator device dispatches and wall time (target: >=4x fewer
+     dispatches, same nu* within sweep-vs-walk noise).
+
+Usage: PYTHONPATH=src python -m benchmarks.dag_sweep [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core import qn_sim
+from repro.core.dag import DagJob, Stage, dag_response_time
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, Problem, VMType
+
+VM = VMType(name="m4.xlarge", cores=4, sigma=0.07, pi=0.22,
+            containers_per_core=2)
+SPARK = DagJob("q7-spark", (Stage(48, 900, 2200), Stage(24, 700, 1700),
+                            Stage(12, 1100, 2600), Stage(4, 1500, 3200)))
+THINK_MS = 9000.0
+H_USERS = 3
+
+
+def dag_problem(deadline_ms: float) -> Problem:
+    cls = ApplicationClass(name="spark-etl", h_users=H_USERS,
+                           think_ms=THINK_MS, deadline_ms=deadline_ms,
+                           eta=0.3, profiles={VM.name: SPARK})
+    return Problem(classes=[cls], vm_types=[VM])
+
+
+def _frontier_throughput(quick: bool):
+    """Scalar loop vs one fused call over the same nu frontier."""
+    from repro.core.dag import response_time_batch
+    n = 8 if quick else 16
+    nus = np.arange(1, 1 + n)
+    kw = dict(think_ms=THINK_MS, h_users=H_USERS,
+              min_jobs=8 if quick else 16, warmup_jobs=4, seed=0,
+              replications=1)
+
+    # warm the jit caches so we time steady-state dispatch, not compilation
+    for s in nus:
+        dag_response_time(SPARK, slots=int(s) * VM.slots, **kw)
+    response_time_batch([SPARK] * n, slots=nus * VM.slots, **kw)
+
+    d0 = qn_sim.dispatch_count()
+    with timer() as t_scalar:
+        scalar = np.array([
+            dag_response_time(SPARK, slots=int(s) * VM.slots, **kw)
+            for s in nus])
+    d_scalar = qn_sim.dispatch_count() - d0
+
+    d0 = qn_sim.dispatch_count()
+    with timer() as t_batch:
+        batched = response_time_batch([SPARK] * n, slots=nus * VM.slots,
+                                      **kw)
+    d_batch = qn_sim.dispatch_count() - d0
+
+    parity = bool(np.array_equal(scalar, batched))
+    assert parity, "DAG batched/scalar parity violated"
+    return {
+        "points": int(n),
+        "scalar_s": t_scalar.s, "batched_s": t_batch.s,
+        "scalar_dispatches": int(d_scalar),
+        "batched_dispatches": int(d_batch),
+        "parity_bit_exact": parity,
+    }
+
+
+def _optimizer_end_to_end(quick: bool):
+    """Point-wise walk vs batched window sweep on the DAG class."""
+    kw = dict(min_jobs=8 if quick else 16, replications=1, seed=0)
+    prob = dag_problem(deadline_ms=13_000.0)
+    out = {}
+    for mode, batched in (("pointwise", False), ("batched", True)):
+        tool = DSpace4Cloud(prob, batched=batched, window=8, **kw)
+        with timer() as t:
+            rep = tool.run()
+        out[mode] = {"wall_s": t.s, "evals": rep.evals,
+                     "dispatches": rep.qn_dispatches,
+                     "cost": rep.total_cost_per_h,
+                     "nu": {k: v.nu for k, v in rep.solutions.items()}}
+    return out
+
+
+def run(quick: bool = False):
+    out = {"frontier": _frontier_throughput(quick),
+           "optimizer": _optimizer_end_to_end(quick)}
+
+    fr = out["frontier"]
+    op = out["optimizer"]
+    dispatch_ratio = op["pointwise"]["dispatches"] / max(
+        op["batched"]["dispatches"], 1)
+    agree = all(abs(op["pointwise"]["nu"][k] - op["batched"]["nu"][k]) <= 2
+                for k in op["pointwise"]["nu"])
+    out["dispatch_ratio"] = dispatch_ratio
+    out["nu_agree"] = agree
+
+    speedup = fr["scalar_s"] / max(fr["batched_s"], 1e-9)
+    emit("dag_sweep", fr["batched_s"] / fr["points"] * 1e6,
+         f"frontier_speedup={speedup:.2f}x;"
+         f"frontier_dispatches={fr['scalar_dispatches']}->"
+         f"{fr['batched_dispatches']};"
+         f"opt_dispatches={op['pointwise']['dispatches']}->"
+         f"{op['batched']['dispatches']}(x{dispatch_ratio:.1f});"
+         f"parity={fr['parity_bit_exact']};agree={agree}",
+         metrics=out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

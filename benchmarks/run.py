@@ -29,6 +29,7 @@ def main() -> None:
     from benchmarks import (
         batched_qn,
         cost_deadline,
+        dag_sweep,
         hc_convergence,
         kernel_microbench,
         roofline_report,
@@ -42,6 +43,7 @@ def main() -> None:
         "cost_deadline": lambda: cost_deadline.run(quick=quick),
         "hc_convergence": lambda: hc_convergence.run(quick=quick),
         "batched_qn": lambda: batched_qn.run(quick=quick),
+        "dag_sweep": lambda: dag_sweep.run(quick=quick),
         "service_throughput": lambda: service_throughput.run(quick=quick),
         "tpu_capacity_plan": lambda: tpu_capacity_plan.run(quick=quick),
         "roofline_report": lambda: roofline_report.run(quick=quick),

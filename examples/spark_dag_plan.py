@@ -1,0 +1,82 @@
+"""Plan a Spark-like DAG class next to a MapReduce class — one Problem.
+
+The paper's §6 future work, end to end: a 4-stage Spark-style stage chain
+(``DagJob``) and a classic MapReduce profile share one capacity-planning
+problem, flow through the same analytic initial solution and batched
+QN-verified hill climbing (each workload kind fused into its own device
+dispatches), and then run again as two tenants of the multi-tenant
+``SolverService`` — where mixed-kind rounds still fuse per kind and the
+second submission is answered from the shared content-addressed cache.
+
+    PYTHONPATH=src python examples/spark_dag_plan.py
+"""
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+from repro.core.workload import DagJob, Stage
+from repro.service import SolverService
+
+small_vm = VMType(name="m4.xlarge", cores=4, sigma=0.07, pi=0.22,
+                  containers_per_core=2)
+big_vm = VMType(name="c20.node", cores=20, sigma=0.35, pi=0.90, speed=1.35)
+
+# classic MapReduce BI workload (the paper's Table-1 shape)
+bi_profile = JobProfile(n_map=64, n_reduce=16, m_avg=4000, m_max=9000,
+                        r_avg=2000, r_max=4500)
+
+# 4-stage Spark-like ETL: read -> shuffle-heavy join -> aggregate -> write
+spark_etl = DagJob("spark-etl", stages=(
+    Stage(n_tasks=48, t_avg=900, t_max=2200),
+    Stage(n_tasks=24, t_avg=700, t_max=1700),
+    Stage(n_tasks=12, t_avg=1100, t_max=2600),
+    Stage(n_tasks=4, t_avg=1500, t_max=3200),
+))
+
+problem = Problem(
+    classes=[
+        ApplicationClass(
+            name="bi-dashboards", h_users=5, think_ms=10_000,
+            deadline_ms=60_000, eta=0.3,
+            profiles={"m4.xlarge": bi_profile,
+                      "c20.node": bi_profile.scaled(1.35)}),
+        ApplicationClass(
+            name="spark-etl", h_users=3, think_ms=9_000,
+            deadline_ms=14_000, eta=0.3,
+            profiles={"m4.xlarge": spark_etl,
+                      "c20.node": spark_etl.scaled(1.35)}),
+    ],
+    vm_types=[small_vm, big_vm],
+)
+
+
+def show(title, solutions, extra=""):
+    print(f"\n{title}{extra}")
+    for name, sol in solutions.items():
+        print(f"  {name:15s} -> {sol.nu:3d} x {sol.vm_type:10s} "
+              f"(reserved={sol.reserved}, spot={sol.spot})  "
+              f"T={sol.predicted_ms / 1000:6.1f}s  {sol.cost_per_h:6.2f}/h")
+
+
+# ---------------------------------------------------------------- solo run
+tool = DSpace4Cloud(problem, min_jobs=15, replications=1)
+report = tool.run()
+show("solo DSpace4Cloud.run (batched, mixed workload kinds)",
+     report.solutions,
+     f" — {report.qn_dispatches} fused simulator dispatches")
+
+# ------------------------------------------------------- through a service
+svc = SolverService(window=8)
+jid1 = svc.submit(problem, min_jobs=15, replications=1)
+jid2 = svc.submit(problem.to_json(), min_jobs=15, replications=1)  # repeat
+jobs = svc.run_until_complete()
+assert jobs[jid1].report.solutions == report.solutions, \
+    "service diverged from the solo run"
+
+show(f"SolverService job {jid1}", jobs[jid1].report.solutions)
+stats = svc.stats()
+sched = stats["scheduler"]
+print(f"\nservice: {stats['rounds']} rounds, "
+      f"{sched['fused_dispatches']} fused dispatches "
+      f"(one per workload kind per round) covering "
+      f"{sched['points_dispatched']} unique points of "
+      f"{sched['points_requested']} requested — the repeat tenant "
+      f"{jid2}'s probes were folded into the same lanes")

@@ -9,16 +9,25 @@ the FCR with every other stage/user (later stages keep the priority of the
 paper's class switch: deeper stages dispatch first, FIFO within a level).
 
 Three tiers mirror the map-reduce machinery:
-  * ``dag_demand``       — ARIA-style (A, B) aggregation over stages;
+  * ``dag_demand``       — ARIA-style (A, B) aggregation over stages
+                           (= ``mva.workload_demand`` on a ``DagJob``);
   * ``dag_response_time``— JAX event simulator (K-stage generalization of
                            ``qn_sim``; replay or exponential services);
+                           ``response_time_batch`` is its fused batched
+                           gait — whole candidate sweeps per device
+                           dispatch, bit-identical per point;
   * ``simulate_dag_cluster`` — detailed trace-replay ground truth.
+
+The ``Stage``/``DagJob`` dataclasses live in ``repro.core.workload`` (the
+problem layer carries them as class profiles); they are re-exported here
+for backward compatibility.  All simulator dispatches are counted in
+``qn_sim``'s process-wide counters so the optimizer's reports and the
+service's zero-dispatch warm-cache guarantees cover DAG classes too.
 """
 from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass, field
 from functools import partial
 from typing import List, Optional, Sequence, Tuple
 
@@ -26,31 +35,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mva import ps_response
+from repro.core import qn_sim
+from repro.core.mva import ps_response, workload_demand
+from repro.core.workload import DagJob, Stage
+
+__all__ = [
+    "DagJob", "Stage", "dag_demand", "dag_response_analytic",
+    "dag_response_time", "response_time_batch", "dag_replayer_lists",
+    "dag_events_needed", "padded_event_budget", "simulate_dag_cluster",
+]
 
 INF = jnp.float32(1e30)
-
-
-@dataclass(frozen=True)
-class Stage:
-    n_tasks: int
-    t_avg: float                  # mean task duration [ms]
-    t_max: float = 0.0            # max (for the analytic B term)
-    cv: float = 0.35              # detailed-sim lognormal CV
-
-    @property
-    def max_or_est(self) -> float:
-        return self.t_max if self.t_max > 0 else 2.5 * self.t_avg
-
-
-@dataclass(frozen=True)
-class DagJob:
-    name: str
-    stages: Tuple[Stage, ...]
-
-    @property
-    def total_work(self) -> float:
-        return sum(s.n_tasks * s.t_avg for s in self.stages)
 
 
 # --------------------------------------------------------------------------
@@ -58,10 +53,9 @@ class DagJob:
 # --------------------------------------------------------------------------
 
 def dag_demand(job: DagJob) -> Tuple[float, float]:
-    """ARIA-style (A, B): T_est(c) = A/c + B summed over the stage chain."""
-    a = sum((s.n_tasks - 0.5) * s.t_avg for s in job.stages)
-    b = 0.5 * sum(s.max_or_est for s in job.stages)
-    return a, b
+    """ARIA-style (A, B): T_est(c) = A/c + B summed over the stage chain
+    (delegates to the generic ``mva.workload_demand``)."""
+    return workload_demand(job)
 
 
 def dag_response_analytic(job: DagJob, slots: int, think: float,
@@ -75,15 +69,26 @@ def dag_response_analytic(job: DagJob, slots: int, think: float,
 # --------------------------------------------------------------------------
 
 def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
-             n_stages: int, max_slots: int, n_events: int,
-             warmup_jobs: int, seed, samples=None):
+             n_stages, max_slots: int, n_events: int,
+             warmup_jobs: int, seed, samples=None, n_events_active=None):
     """n_tasks: (K,) int32; t_avg: (K,) f32.  phase: 0=think, k=stage k.
     ``samples`` (K, NS): optional per-stage empirical duration lists
     (replayer mode — without it, exponential services over-predict
-    wave-dominated stages by ~50%, same effect as Table 3)."""
+    wave-dominated stages by ~50%, same effect as Table 3).
+
+    ``n_stages`` may be traced (a per-lane value inside a vmapped batch —
+    it only bounds clips and comparisons, so stage arrays can be padded to
+    a batch-maximum K).  ``n_events_active``: optional traced per-config
+    event budget; the scan length stays static (padded across a batch) but
+    steps with ``i >= n_events_active`` become no-ops and the think-redraw
+    fold offset uses the *logical* budget — so a config padded inside a
+    batch produces bit-for-bit the random stream of a scalar run whose
+    ``n_events`` equals its own logical budget (the same contract as
+    ``qn_sim``)."""
     key = jax.random.key(seed)
     H = h_users
     k0, key = jax.random.split(key)
+    fold_base = n_events if n_events_active is None else n_events_active
 
     state = dict(
         now=jnp.float32(0),
@@ -106,9 +111,6 @@ def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
 
         # deeper stages first (paper's class-switch priority), FIFO inside
         key_i = jax.random.fold_in(key, i)
-        depth_key = jnp.where(s["pending"] > 0,
-                              -s["phase"].astype(jnp.float32) * 1e9
-                              + 0.0, INF)
         # two-level: pick max depth with pending, then min arrival
         has_p = s["pending"] > 0
         max_depth = jnp.max(jnp.where(has_p, s["phase"], -1))
@@ -130,6 +132,11 @@ def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
         t_think = jnp.min(s["think_end"])
         b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
         b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
+        if n_events_active is not None:          # padded batch: mask tail
+            active = i < n_events_active
+            b_dispatch = b_dispatch & active
+            b_complete = b_complete & active
+            b_think = b_think & active
 
         cslot = jnp.argmin(s["slot_end"])
         cu = s["slot_user"][cslot]
@@ -148,7 +155,7 @@ def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
         c_arrival = s["arrival"].at[cu].set(
             jnp.where(advance, t_slot,
                       jnp.where(job_done, INF, s["arrival"][cu])))
-        kq = jax.random.fold_in(key, i + n_events)
+        kq = jax.random.fold_in(key, i + fold_base)
         c_think = s["think_end"].at[cu].set(
             jnp.where(job_done,
                       t_slot + jax.random.exponential(kq) * think_ms,
@@ -219,6 +226,25 @@ def _dag_sim_replay_jit(n_tasks, t_avg, think_ms, slots_cap, seed, samples,
                     max_slots, n_events, warmup_jobs, seed, samples=samples)
 
 
+@partial(jax.jit, static_argnames=("h_users", "max_slots", "n_events",
+                                   "warmup_jobs", "has_samples"))
+def _dag_sim_batch_jit(n_tasks, t_avg, think_ms, slots_cap, seed,
+                       n_events_active, n_stages, samples, *, h_users,
+                       max_slots, n_events, warmup_jobs, has_samples):
+    """One fused device program over a flat (candidate x replication)
+    batch.  ``n_tasks``/``t_avg`` are (B, K_max) stage arrays padded to the
+    batch-maximum chain length; ``n_stages`` carries each lane's true K
+    (traced — it only bounds clips/compares inside the step).  Replay
+    sample lists, when given, are shared across the batch."""
+    def one(nt, ta, tm, sc, sd, nea, ns):
+        return _dag_sim(nt, ta, tm, sc, h_users, ns, max_slots, n_events,
+                        warmup_jobs, sd,
+                        samples=samples if has_samples else None,
+                        n_events_active=nea)
+    return jax.vmap(one)(n_tasks, t_avg, think_ms, slots_cap, seed,
+                         n_events_active, n_stages)
+
+
 def dag_replayer_lists(job: DagJob, runs: int = 20, seed: int = 100,
                        cap: int = 1024) -> np.ndarray:
     """(K, cap) per-stage empirical duration samples (profiling runs)."""
@@ -236,19 +262,41 @@ def _pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
+def dag_events_needed(job: DagJob, min_jobs: int = 40,
+                      warmup_jobs: int = 8) -> int:
+    """Event-budget heuristic (the DAG analogue of ``qn_sim.events_needed``):
+    ~2 events per task (dispatch + completion) + 4 per job, times jobs,
+    padded 1.5x."""
+    per_job = 2 * sum(s.n_tasks for s in job.stages) + 4
+    return int(1.5 * per_job * (min_jobs + warmup_jobs))
+
+
+def padded_event_budget(job: DagJob, *, min_jobs: int = 40,
+                        warmup_jobs: int = 8) -> int:
+    """The pow2-bucketed logical event budget one (candidate, replication)
+    lane costs for this chain — what ``dag_response_time`` /
+    ``response_time_batch`` will actually scan.  Depends only on the stage
+    task counts and job quota, so admission control can price a DAG request
+    without knowing the candidate nu yet."""
+    return _pow2(dag_events_needed(job, min_jobs, warmup_jobs))
+
+
 def dag_response_time(job: DagJob, slots: int, think_ms: float,
                       h_users: int, min_jobs: int = 40,
                       warmup_jobs: int = 8, seed: int = 0,
                       replications: int = 2, samples=None) -> float:
-    per_job = 2 * sum(s.n_tasks for s in job.stages) + 4
-    n_events = _pow2(int(1.5 * per_job * (min_jobs + warmup_jobs)))
+    """Mean response time of the closed K-stage chain QN (one device
+    dispatch per replication; the parity oracle of ``response_time_batch``)."""
+    n_events = padded_event_budget(job, min_jobs=min_jobs,
+                                   warmup_jobs=warmup_jobs)
     nt = jnp.asarray([s.n_tasks for s in job.stages], jnp.int32)
     ta = jnp.asarray([s.t_avg for s in job.stages], jnp.float32)
-    outs = []
+    outs, cnts = [], []
     for r in range(replications):
         common = dict(h_users=h_users, n_stages=len(job.stages),
                       max_slots=_pow2(slots), n_events=n_events,
                       warmup_jobs=warmup_jobs)
+        qn_sim._count_dispatch(events_total=n_events, events_useful=n_events)
         if samples is not None:
             m, c = _dag_sim_replay_jit(
                 nt, ta, jnp.float32(think_ms), jnp.int32(slots),
@@ -256,12 +304,98 @@ def dag_response_time(job: DagJob, slots: int, think_ms: float,
         else:
             m, c = _dag_sim_jit(nt, ta, jnp.float32(think_ms),
                                 jnp.int32(slots), seed + 1000 * r, **common)
-        if float(c) > 0:
-            outs.append((float(m), float(c)))
-    if not outs:
-        return float("inf")
-    tot = sum(c for _, c in outs)
-    return sum(m * c for m, c in outs) / tot
+        outs.append(float(m))
+        cnts.append(float(c))
+    return qn_sim._combine(outs, cnts)[0]
+
+
+def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
+                        h_users: int, min_jobs: int = 40,
+                        warmup_jobs: int = 8, seed: int = 0,
+                        replications: int = 2, samples=None) -> np.ndarray:
+    """Batched ``dag_response_time``: ONE fused device dispatch for a whole
+    candidate sweep of DAG configurations.
+
+    ``jobs`` is a per-point sequence of ``DagJob`` (entries may repeat for
+    a nu frontier of one job, or differ per point — chains of different
+    length are padded to the batch-maximum K and each lane carries its true
+    stage count); ``think_ms``/``slots`` broadcast over the C points;
+    ``h_users`` is a single static int (the fusion-group invariant, as in
+    ``qn_sim.response_time_batch``).  Each lane runs with its own logical
+    event budget, seed, and stage count, so every point's estimate is
+    bit-identical to a scalar ``dag_response_time`` call with the same
+    parameters — the same parity contract the MapReduce batch honors.
+
+    ``samples`` (K, NS), when given, switches the whole batch to replayer
+    mode with the shared per-stage duration lists; all jobs in the batch
+    must then share one stage count (enforced here with a ``ValueError``;
+    the evaluator and the service scheduler extend their replay fusion
+    keys with the stage count so their batches satisfy it by
+    construction).
+
+    Returns a float64 array of shape (C,) of mean response times [ms]
+    (``inf`` where no replication completed a job).
+    """
+    jobs = list(jobs)
+    C = len(jobs)
+    if C == 0:
+        return np.zeros((0,), np.float64)
+
+    def _b(x, dt):
+        return np.broadcast_to(np.asarray(x, dt), (C,)).copy()
+
+    tk = _b(think_ms, np.float32)
+    sl = _b(slots, np.int64)
+    ks = [len(j.stages) for j in jobs]
+    K = max(ks)
+    if samples is not None and len(set(ks)) != 1:
+        raise ValueError("replay-mode DAG batches must share a stage count")
+    nt = np.zeros((C, K), np.int32)
+    ta = np.zeros((C, K), np.float32)
+    for c, job in enumerate(jobs):
+        nt[c, :ks[c]] = [s.n_tasks for s in job.stages]
+        ta[c, :ks[c]] = [s.t_avg for s in job.stages]
+    ns = np.asarray(ks, np.int32)
+    n_ev = np.asarray([padded_event_budget(j, min_jobs=min_jobs,
+                                           warmup_jobs=warmup_jobs)
+                       for j in jobs], np.int64)
+    scan_len = int(n_ev.max())
+    max_slots = _pow2(int(sl.max()))
+
+    # Pad the candidate axis to a power of two (replicating the last
+    # candidate) so sweeps of nearby widths share one compiled program.
+    C_pad = _pow2(C)
+    if C_pad > C:
+        pad = lambda x: np.concatenate(
+            [x, np.repeat(x[-1:], C_pad - C, axis=0)])
+        nt, ta, tk, sl, ns, n_ev = map(pad, (nt, ta, tk, sl, ns, n_ev))
+
+    R = replications
+    seeds = seed + 1000 * np.tile(np.arange(R, dtype=np.int64), C_pad)
+    rep = lambda x: np.repeat(x, R, axis=0)
+
+    smp = None
+    if samples is not None:
+        smp = jnp.asarray(np.asarray(samples, np.float32))
+
+    qn_sim._count_dispatch(
+        lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
+        events_total=scan_len * C_pad * R,
+        events_useful=int(n_ev[:C].sum()) * R)
+    mean, cnt = _dag_sim_batch_jit(
+        jnp.asarray(rep(nt), jnp.int32), jnp.asarray(rep(ta), jnp.float32),
+        jnp.asarray(rep(tk)), jnp.asarray(rep(sl), jnp.int32),
+        jnp.asarray(seeds, jnp.int32), jnp.asarray(rep(n_ev), jnp.int32),
+        jnp.asarray(rep(ns), jnp.int32), smp,
+        h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
+        warmup_jobs=warmup_jobs, has_samples=smp is not None)
+    mean = np.asarray(mean, np.float64).reshape(C_pad, R)[:C]
+    cnt = np.asarray(cnt, np.float64).reshape(C_pad, R)[:C]
+
+    out = np.full((C,), np.inf)
+    for c in range(C):      # same float64 combination as the scalar path
+        out[c] = qn_sim._combine(mean[c], cnt[c])[0]
+    return out
 
 
 # --------------------------------------------------------------------------

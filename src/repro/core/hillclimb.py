@@ -16,6 +16,11 @@ feasible minimum-cost point — same fixed point as the scalar walk when the
 evaluator is monotone in nu, at a fraction of the dispatches.
 ``hill_climb`` picks the gait automatically from the evaluator's
 capabilities.
+
+The climber is workload-agnostic by construction: it only ever talks to
+the evaluator through ``(cls, vm, nu)`` probes and never inspects profile
+fields, so classes whose workload is a Spark/Tez DAG chain climb exactly
+like MapReduce classes (the evaluator owns the kind dispatch).
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ analytic MVA model with bisection (exact for monotone T — this *is* the
 stationary point of the relaxed convex program, then ceil-restored to
 integrality), independently per class and per VM type, then pick the
 cheapest feasible VM type (the outer x_ij choice).
+
+Workload-generic: the bisection prices candidates through
+``mva.workload_demand``, so classes whose profile is a Tez/Spark DAG chain
+get the same KKT initial point as MapReduce classes (T_est(c) = A/c + B is
+monotone in c for every kind).
 """
 from __future__ import annotations
 

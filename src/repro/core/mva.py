@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.problem import JobProfile
+from repro.core.workload import DAG, workload_kind
 
 PS_ITERS = 40
 
@@ -46,6 +47,24 @@ def aria_demand(p: JobProfile, slots: int = 1) -> Tuple[float, float]:
     a = 0.5 * (a + p.n_map * p.m_avg + p.n_reduce * p.r_avg)
     b = 0.5 * (p.m_max + p.r_max + p.s1_max)
     return a, b
+
+
+def workload_demand(w) -> Tuple[float, float]:
+    """Generic ARIA-style (A, B) demand of any workload kind, such that
+    T_est(c) = A/c + B.
+
+    For MapReduce profiles this IS ``aria_demand`` (bit-identical — the
+    paper-faithful path does not change); for DAG chains the same
+    average/max aggregation is summed over the stage sequence (each stage
+    is one fork-join, so A accumulates (n_k - 0.5) t_k and B half the
+    per-stage maxima).  Every analytic consumer — the KKT bisection of
+    ``milp.py``, ``job_response``, the batched AMVA frontier and its Pallas
+    kernel — prices workloads through this one function."""
+    if workload_kind(w) == DAG:
+        a = sum((s.n_tasks - 0.5) * s.t_avg for s in w.stages)
+        b = 0.5 * sum(s.max_or_est for s in w.stages)
+        return a, b
+    return aria_demand(w)
 
 
 def aria_bounds(p: JobProfile, slots: int) -> Tuple[float, float]:
@@ -76,10 +95,10 @@ def mva_response(demand: float, think: float, h_users: int) -> float:
     return r
 
 
-def job_response(p: JobProfile, slots: int, think: float,
-                 h_users: int) -> float:
-    """Analytic response time of class jobs on ``slots`` containers."""
-    a, b = aria_demand(p)
+def job_response(p, slots: int, think: float, h_users: int) -> float:
+    """Analytic response time of class jobs on ``slots`` containers
+    (``p`` is any workload kind — see ``workload_demand``)."""
+    a, b = workload_demand(p)
     return ps_response(a / slots, b, think, h_users)
 
 
@@ -116,10 +135,11 @@ def mva_response_batch(demand: jax.Array, think: jax.Array,
     return rs[-1]
 
 
-def min_slots_for_deadline(p: JobProfile, think: float, h_users: int,
+def min_slots_for_deadline(p, think: float, h_users: int,
                            deadline: float, max_slots: int = 1 << 16) -> int:
     """Smallest slot count meeting the deadline under the PS model
-    (= the KKT point: deadline binds at the optimum)."""
+    (= the KKT point: deadline binds at the optimum).  Workload-generic:
+    ``p`` may be a MapReduce profile or a DAG chain."""
     lo, hi = 1, max_slots
     if job_response(p, hi, think, h_users) > deadline:
         return -1

@@ -12,6 +12,13 @@ point or two apart — see ``sweep_class``).
 frontier proposes nu*, then ONE batched QN call verifies the whole window
 around it (orders of magnitude fewer simulator dispatches — benchmarked in
 benchmarks/hc_convergence.py and benchmarks/batched_qn.py).
+
+Workload-generic: a ``Problem`` may mix MapReduce classes and Spark/Tez
+DAG classes — the initial solution prices both through
+``mva.workload_demand``, and the batched evaluator routes each window to
+its kind's fused simulator (``evaluators.fused_eval_call``).  The
+MapReduce path is unchanged bit-for-bit; DAG windows get the same
+one-dispatch-per-window economics (benchmarks/dag_sweep.py).
 """
 from __future__ import annotations
 

@@ -4,12 +4,24 @@ An instance couples application classes C (each with concurrency H_i, think
 time Z_i, deadline D_i, spot bound eta_i) with a VM-type catalog V (cores,
 spot price sigma_j, effective reserved price pi_j) and per-(class, vmtype)
 job profiles P_ij extracted from execution logs.
+
+A class's per-VM-type profile is a *workload* (``repro.core.workload``):
+either the paper's MapReduce ``JobProfile`` below or a Tez/Spark-style
+``workload.DagJob`` stage chain — one ``Problem`` may mix both kinds, and
+the whole evaluation plane (analytic tier, batched QN tier, service)
+dispatches on ``workload.kind``.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+from repro.core.workload import (
+    MAPREDUCE,
+    workload_from_dict,
+    workload_to_dict,
+)
 
 
 @dataclass(frozen=True)
@@ -28,6 +40,10 @@ class JobProfile:
     r_max: float
     s1_avg: float = 0.0
     s1_max: float = 0.0
+
+    @property
+    def kind(self) -> str:
+        return MAPREDUCE
 
     def scaled(self, speed: float) -> "JobProfile":
         """Profile on a VM type whose cores run ``speed``x faster."""
@@ -60,15 +76,21 @@ class VMType:
 
 @dataclass(frozen=True)
 class ApplicationClass:
-    """One user class i (paper Table 1)."""
+    """One user class i (paper Table 1).
+
+    ``profiles`` maps VM-type name -> workload: a ``JobProfile`` or a
+    ``workload.DagJob`` (the per-class performance model is pluggable; see
+    docs/workloads.md).  The ``"_ref"`` entry, when present, is the
+    fallback profile scaled by VM speed for catalog entries without a
+    dedicated profiling run."""
     name: str
     h_users: int                  # H_i concurrency level
     think_ms: float               # Z_i
     deadline_ms: float            # D_i
     eta: float = 0.3              # max spot fraction
-    profiles: Dict[str, JobProfile] = field(default_factory=dict)  # by VM name
+    profiles: Dict[str, object] = field(default_factory=dict)  # by VM name
 
-    def profile_for(self, vm: VMType) -> JobProfile:
+    def profile_for(self, vm: VMType):
         if vm.name in self.profiles:
             return self.profiles[vm.name]
         # fall back to a reference profile scaled by VM speed
@@ -111,7 +133,8 @@ class Problem:
         vms = [VMType(**v) for v in raw["vm_types"]]
         classes = []
         for c in raw["classes"]:
-            profs = {k: JobProfile(**p) for k, p in c.pop("profiles").items()}
+            profs = {k: workload_from_dict(p)
+                     for k, p in c.pop("profiles").items()}
             classes.append(ApplicationClass(profiles=profs, **c))
         return Problem(classes=classes, vm_types=vms)
 
@@ -119,7 +142,8 @@ class Problem:
         return json.dumps({
             "classes": [
                 {**{k: v for k, v in asdict(c).items() if k != "profiles"},
-                 "profiles": {k: asdict(p) for k, p in c.profiles.items()}}
+                 "profiles": {k: workload_to_dict(p)
+                              for k, p in c.profiles.items()}}
                 for c in self.classes
             ],
             "vm_types": [asdict(v) for v in self.vm_types],

@@ -250,6 +250,10 @@ def _sim_batch_jit(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
 # dispatches the counters track vmap lanes and simulated events — including
 # the padding overhead (pow2 candidate axis, scan length padded to the batch
 # maximum) that the service's admission control exists to keep profitable.
+# The DAG simulator (``repro.core.dag``) reports into the SAME counters, so
+# ``dispatch_count()``/``sim_stats()`` are the process-wide accounting for
+# every workload kind (run reports, benchmarks, and the service's
+# zero-dispatch warm-cache guarantees all rely on that).
 # The hill climber probes classes from a thread pool, so updates take a lock.
 # ---------------------------------------------------------------------------
 
@@ -299,9 +303,11 @@ def _pow2(n: int) -> int:
 def _combine(means, cnts) -> Tuple[float, float]:
     """Count-weighted mean across replications, in host float64.
 
-    Shared by the scalar and batched paths — the bit-exact parity contract
-    of ``response_time_batch`` requires one combination rule.  Returns
-    (inf, 0.0) when no replication completed a job."""
+    Shared by the scalar and batched paths of BOTH workload simulators
+    (this module and ``repro.core.dag``) — each kind's bit-exact parity
+    contract requires one combination rule, and cross-kind consistency
+    keeps mixed-workload reports comparable.  Returns (inf, 0.0) when no
+    replication completed a job."""
     good = [(float(m), float(c)) for m, c in zip(means, cnts) if c > 0]
     if not good:
         return float("inf"), 0.0

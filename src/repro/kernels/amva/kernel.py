@@ -9,6 +9,10 @@ fixed point
 is elementwise in the candidate, so candidates tile into 8x128-aligned
 VMEM lanes and iterate entirely in registers/VMEM (40 iterations, no HBM
 round trips).
+
+The kernel is workload-agnostic: it consumes the generic (A, B) demand of
+``mva.workload_demand``, so frontiers of MapReduce profiles and Spark/Tez
+DAG chains (``evaluators.amva_frontier``) share the one launch.
 """
 from __future__ import annotations
 

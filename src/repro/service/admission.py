@@ -5,9 +5,10 @@ scan length and pow2 candidate count (``qn_sim.response_time_batch``), so
 batching stays profitable only while the padding waste is bounded — admit
 too many heterogeneous jobs at once and one huge profile stretches every
 lane.  The controller prices each job in *simulator events* (the actual
-unit of device work: ``qn_sim.padded_event_budget`` per lane x window x
-replications x classes) and keeps the sum over active jobs under
-``max_inflight_events``.
+unit of device work: ``evaluators.workload_event_budget`` per lane x
+window x replications x classes — workload-generic, so MapReduce and
+Spark/Tez DAG classes are priced in the same currency) and keeps the sum
+over active jobs under ``max_inflight_events``.
 
 Policies for jobs that do not fit right now:
 
@@ -26,7 +27,7 @@ from __future__ import annotations
 from dataclasses import asdict, dataclass, field
 from typing import Dict
 
-from repro.core import qn_sim
+from repro.core.evaluators import workload_event_budget
 from repro.core.problem import Problem
 
 ADMIT, DEFER, SHED = "admit", "defer", "shed"
@@ -37,8 +38,8 @@ def estimate_job_events(problem: Problem, *, window: int, min_jobs: int,
     """Upper bound on the simulator events one scheduling round of this job
     can put in flight: per class, one full window of candidates times
     replications times the padded per-lane budget of its costliest VM-type
-    profile.  Event budgets depend only on task counts (not on nu), so this
-    is computable at submission time."""
+    profile (any workload kind).  Event budgets depend only on task counts
+    (not on nu), so this is computable at submission time."""
     total = 0
     for cls in problem.classes:
         per_lane = 0
@@ -47,9 +48,8 @@ def estimate_job_events(problem: Problem, *, window: int, min_jobs: int,
                 prof = cls.profile_for(vm)
             except KeyError:
                 continue
-            per_lane = max(per_lane, qn_sim.padded_event_budget(
-                prof.n_map, prof.n_reduce,
-                min_jobs=min_jobs, warmup_jobs=warmup_jobs))
+            per_lane = max(per_lane, workload_event_budget(
+                prof, min_jobs=min_jobs, warmup_jobs=warmup_jobs))
         total += window * replications * per_lane
     return total
 

@@ -1,53 +1,31 @@
 """Shared persistent evaluation cache for the multi-tenant solver service.
 
-The single-run evaluators key their caches by ``(class_name, vm_name, nu)``
-— fine within one job, unsound across tenants (two tenants may both call a
-class "prod" with different profiles).  The service cache is
-*content-addressed* instead: the key is ``(profile_hash, vm_name, nu,
-seed)`` where ``profile_hash`` digests everything that determines a QN
-estimate besides the candidate size — the scaled job profile, think time,
-concurrency level, VM slot count, simulation quotas, replication count and
-the replay sample lists.  Identical workloads therefore hit warm results
-across jobs, tenants, and — via the JSON spill — process restarts.
+The cache is *content-addressed*: the key is ``(profile_hash, vm_name, nu,
+seed)`` where ``profile_hash`` (``repro.core.workload.profile_hash``, re-
+exported here) digests everything that determines a QN estimate besides
+the candidate size — the scaled workload structure (MapReduce task counts
+and durations, or DAG stage counts/durations — the workload *kind* is part
+of the payload, so DAG and MapReduce entries can never collide), think
+time, concurrency level, VM slot count, simulation quotas, replication
+count and the replay sample lists.  Identical workloads therefore hit warm
+results across jobs, tenants, and — via the JSON spill — process restarts.
+Since the workload refactor the single-run evaluator caches use the same
+keys (``evaluators.make_qn_evaluator``), so a name collision can't leak
+results there either.
 """
 from __future__ import annotations
 
-import hashlib
 import json
 import os
 import threading
 from typing import Dict, Optional, Tuple
 
+from repro.core.workload import profile_hash, samples_digest  # noqa: F401
+#   (re-exported: the digests are defined next to the workload kinds they
+#    must cover, but remain part of this module's public API)
+
 # (profile_hash, vm_name, nu, seed) -> mean response time [ms]
 CacheKey = Tuple[str, str, int, int]
-
-
-def samples_digest(samples) -> str:
-    """Digest of replay task-duration lists (``None`` -> exponential mode)."""
-    if samples is None:
-        return "exp"
-    import numpy as np
-    ms, rs = samples
-    h = hashlib.sha1()
-    h.update(np.asarray(ms, np.float32).tobytes())
-    h.update(np.asarray(rs, np.float32).tobytes())
-    return h.hexdigest()[:16]
-
-
-def profile_hash(prof, think_ms: float, h_users: int, vm_slots: int, *,
-                 min_jobs: int, warmup_jobs: int, replications: int,
-                 samples=None) -> str:
-    """Content hash of one evaluation context.  ``prof`` is the profile
-    already scaled to the VM type (``cls.profile_for(vm)``), so VM speed is
-    folded in; ``vm_slots`` covers the containers-per-VM mapping from nu to
-    simulator slots.  The candidate ``nu`` and the ``seed`` stay out — they
-    are separate key components."""
-    payload = "|".join(repr(x) for x in (
-        prof.n_map, prof.n_reduce, prof.m_avg, prof.r_avg,
-        float(think_ms), int(h_users), int(vm_slots),
-        int(min_jobs), int(warmup_jobs), int(replications),
-        samples_digest(samples)))
-    return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
 
 class EvalCache:

@@ -1,13 +1,15 @@
 """The multi-tenant solver service: job queue + cooperative solver pool.
 
 ``SolverService`` accepts capacity-planning problems (JSON or ``Problem``
-objects), runs many ``DSpace4Cloud`` optimizations *cooperatively* — all
+objects; classes may carry MapReduce profiles, Spark/Tez DAG chains, or
+a mix), runs many ``DSpace4Cloud`` optimizations *cooperatively* — all
 active jobs advance in lockstep scheduling rounds so their QN window
 requests coexist in flight — and fuses every round's windows across jobs
-into shared device dispatches (``FusionScheduler``).  Admission control
-bounds the concurrent in-flight event budget; the shared ``EvalCache``
-makes repeat tenants with overlapping catalogs warm-start, across jobs and
-across process restarts.
+into shared device dispatches (``FusionScheduler``, grouping by a
+workload-aware fusion key: one dispatch per workload kind per group).
+Admission control bounds the concurrent in-flight event budget; the
+shared ``EvalCache`` makes repeat tenants with overlapping catalogs
+warm-start, across jobs and across process restarts.
 
 One scheduling round (``step()``)::
 

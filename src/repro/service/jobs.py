@@ -38,7 +38,9 @@ class Job:
     problem: Problem
     spec: SimSpec
     window: int = 16
-    samples: Optional[Dict[Tuple[str, str], tuple]] = None
+    # {(class_name, vm_name): replay payload} — (m_list, r_list) for
+    # MapReduce classes, a (n_stages, n_samples) array for DAG classes
+    samples: Optional[Dict[Tuple[str, str], object]] = None
     tag: Optional[str] = None
     state: str = JobState.QUEUED
     submitted_s: float = field(default_factory=time.time)

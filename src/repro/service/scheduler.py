@@ -4,18 +4,23 @@ Each scheduling round, every active job proposes the windows its classes
 want next (the resumable ``DSpace4Cloud.run_steps`` protocol).  The
 scheduler collects them ALL, resolves what it can from the shared
 ``EvalCache``, groups the remaining points by *fusion key* — the invariants
-one ``qn_sim.response_time_batch`` program requires all its lanes to share:
+one batched simulator program requires all its lanes to share:
 
-    (h_users, replay-sample digest, min_jobs, warmup_jobs,
+    (workload kind, h_users, replay-sample digest, min_jobs, warmup_jobs,
      replications, seed)
 
-— deduplicates identical points (two tenants probing the same
-configuration cost one lane), and issues ONE fused device call per group
-through the same ``fused_qn_call`` marshaling the single-job evaluator
-uses.  Because every vmap lane runs with its own logical event budget and
-per-replication seed, each point's estimate is bit-identical to what the
-job's solo run would have computed — fusion changes dispatch *timing*,
-never values.
+(+ the stage count for DAG *replay* groups, whose lanes share one
+per-stage sample array) — deduplicates identical points (two tenants
+probing the same configuration cost one lane), and issues ONE fused
+device call per group
+through the same ``fused_eval_call`` marshaling the single-job evaluator
+uses, which routes MapReduce groups to ``qn_sim.response_time_batch`` and
+DAG groups to ``dag.response_time_batch``.  Mixed-tenant rounds (MapReduce
++ Spark/Tez jobs in flight together) therefore still fuse maximally: one
+dispatch per kind per group.  Because every vmap lane runs with its own
+logical event budget and per-replication seed, each point's estimate is
+bit-identical to what the job's solo run would have computed — fusion
+changes dispatch *timing*, never values.
 """
 from __future__ import annotations
 
@@ -24,8 +29,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.evaluators import fused_qn_call
+from repro.core.evaluators import fused_eval_call
 from repro.core.problem import ApplicationClass, VMType
+from repro.core.workload import DAG, workload_kind
 from repro.service.cache import CacheKey, EvalCache, profile_hash, \
     samples_digest
 
@@ -49,7 +55,9 @@ class WindowRequest:
     vm: VMType
     nus: List[int]
     spec: SimSpec
-    samples: Optional[Tuple] = None      # replay (m_list, r_list) or None
+    samples: object = None               # replay payload in the workload's
+    #                                      native form — (m_list, r_list)
+    #                                      or a (K, NS) array — or None
     result: Optional[np.ndarray] = None  # filled by flush(), aligned to nus
 
 
@@ -113,7 +121,15 @@ class FusionScheduler:
         for req in pending:
             prof = req.cls.profile_for(req.vm)
             digest, sdig = self._digest(req)
-            fkey = (req.cls.h_users, sdig, req.spec)
+            kind = workload_kind(prof)
+            fkey = (kind, req.cls.h_users, sdig, req.spec)
+            if kind == DAG and req.samples is not None:
+                # replay lanes share one (K, NS) sample array, so a replay
+                # group must also agree on the stage count — two tenants
+                # reusing one profiling run for different chain lengths
+                # must not land in the same program (non-replay DAG lanes
+                # pad freely and fuse across chain lengths)
+                fkey += (len(prof.stages),)
             keys[id(req)] = kl = []
             for nu in req.nus:
                 ck: CacheKey = (digest, req.vm.name, int(nu), req.spec.seed)
@@ -129,18 +145,18 @@ class FusionScheduler:
                     group[ck] = (prof, req.cls.think_ms,
                                  int(nu) * req.vm.slots, req.samples)
 
-        for (h_users, _sdig, spec), group in todo.items():
+        for fkey, group in todo.items():
+            kind, h_users, _sdig, spec = fkey[:4]
             cks = list(group)
             profs = [group[k][0] for k in cks]
             think = [group[k][1] for k in cks]
             slots = [group[k][2] for k in cks]
             samples = group[cks[0]][3]
-            ms, rs = samples if samples is not None else (None, None)
-            ts = fused_qn_call(profs, think, h_users, slots,
-                               min_jobs=spec.min_jobs,
-                               warmup_jobs=spec.warmup_jobs,
-                               replications=spec.replications,
-                               seed=spec.seed, m_samples=ms, r_samples=rs)
+            ts = fused_eval_call(kind, profs, think, h_users, slots,
+                                 min_jobs=spec.min_jobs,
+                                 warmup_jobs=spec.warmup_jobs,
+                                 replications=spec.replications,
+                                 seed=spec.seed, samples=samples)
             for ck, t in zip(cks, ts):
                 self.cache.put(ck, float(t))
             rep.groups += 1

@@ -1,4 +1,11 @@
-"""DAG extension (paper §6 future work): K-stage fork-join chains."""
+"""DAG extension (paper §6 future work): K-stage fork-join chains.
+
+Covers the three DAG tiers, the single-stage cross-tier consistency with
+the MapReduce machinery (the two workload kinds must agree where they
+overlap), and the bit-exact scalar-vs-batched parity contract of
+``dag.response_time_batch``.
+"""
+import numpy as np
 import pytest
 
 from repro.core.dag import (
@@ -7,6 +14,8 @@ from repro.core.dag import (
     dag_demand,
     dag_response_analytic,
     dag_response_time,
+    padded_event_budget,
+    response_time_batch,
     simulate_dag_cluster,
 )
 
@@ -69,3 +78,112 @@ def test_deeper_stage_priority_conserves_jobs():
     t = dag_response_time(JOB3, slots=8, think_ms=2000, h_users=4,
                           min_jobs=25, warmup_jobs=4, seed=1)
     assert 0 < t < 1e9
+
+
+# ---------------------------------------------- cross-tier MR consistency
+#
+# A single-stage chain and a map-only MapReduce profile describe the SAME
+# system, so every tier of the DAG machinery must agree with its MapReduce
+# counterpart: exactly on the analytic demand, within simulation noise on
+# the two simulators.
+
+def test_single_stage_demand_matches_aria():
+    from repro.core.mva import aria_demand, workload_demand
+    from repro.core.problem import JobProfile
+    job = DagJob("one", stages=(Stage(n_tasks=40, t_avg=1000, t_max=2500),))
+    prof = JobProfile(n_map=40, n_reduce=0, m_avg=1000, m_max=2500,
+                      r_avg=0.0, r_max=0.0)
+    assert dag_demand(job) == aria_demand(prof)
+    assert workload_demand(job) == dag_demand(job)
+    assert workload_demand(prof) == aria_demand(prof)
+
+
+def test_single_stage_sim_matches_qn():
+    # the MR QN needs a reduce phase; make it negligible (1 task x 1 ms)
+    from repro.core.qn_sim import response_time
+    job = DagJob("one", stages=(Stage(n_tasks=24, t_avg=1000),))
+    t_dag = dag_response_time(job, slots=12, think_ms=6000, h_users=3,
+                              min_jobs=30, warmup_jobs=5, seed=2)
+    t_mr = response_time(n_map=24, n_reduce=1, m_avg=1000, r_avg=1.0,
+                         think_ms=6000, h_users=3, slots=12,
+                         min_jobs=30, warmup_jobs=5, seed=2)
+    assert t_dag == pytest.approx(t_mr, rel=0.15)
+
+
+def test_single_stage_cluster_matches_cluster_sim():
+    from repro.core.cluster_sim import WorkloadSpec, simulate_cluster
+    job = DagJob("one", stages=(Stage(n_tasks=24, t_avg=1000, cv=0.35),))
+    spec = WorkloadSpec(name="one", n_map=24, n_reduce=1, map_ms=1000,
+                        reduce_ms=1.0, cv=0.35, startup_ms=0.0,
+                        shuffle_first_ms=0.0, straggler_p=0.0)
+    t_dag = simulate_dag_cluster(job, slots=12, h_users=3, think_ms=6000,
+                                 max_jobs=40, warmup_jobs=5, seed=11)
+    t_mr, _ = simulate_cluster(spec, slots=12, h_users=3, think_ms=6000,
+                               max_jobs=40, warmup_jobs=5, seed=13)
+    assert t_dag == pytest.approx(t_mr, rel=0.2)
+
+
+# -------------------------------------------------- batched parity (PR 3)
+#
+# The contract of ``response_time_batch`` mirrors the MapReduce one: for
+# the same parameters every lane reproduces the scalar ``dag_response_time``
+# estimate bit-for-bit — padding of the candidate axis, slot arrays, chain
+# length, and event budgets is invisible.
+
+FAST = dict(min_jobs=8, warmup_jobs=3, replications=2)
+JOB2 = DagJob(name="b", stages=(Stage(8, 1000, 2500), Stage(4, 500, 1200)))
+
+
+def test_dag_batched_matches_scalar_frontier():
+    nus = [4, 6, 9, 14, 20]                     # non-pow2 count -> padded
+    kw = dict(think_ms=8000.0, h_users=3, seed=7, **FAST)
+    scalar = np.array([dag_response_time(JOB3, slots=s, **kw) for s in nus])
+    batched = response_time_batch([JOB3] * len(nus), think_ms=8000.0,
+                                  slots=np.array(nus), h_users=3, seed=7,
+                                  **FAST)
+    assert np.array_equal(scalar, batched)
+
+
+def test_dag_batched_matches_scalar_mixed_chain_lengths():
+    # different K per lane => stage arrays padded, per-lane event budgets
+    jobs = [JOB3, JOB2, JOB3]
+    sls = [6, 10, 16]
+    kw = dict(think_ms=8000.0, h_users=3, seed=7, **FAST)
+    scalar = np.array([dag_response_time(j, slots=s, **kw)
+                       for j, s in zip(jobs, sls)])
+    batched = response_time_batch(jobs, think_ms=8000.0,
+                                  slots=np.array(sls), h_users=3, seed=7,
+                                  **FAST)
+    assert np.array_equal(scalar, batched)
+
+
+def test_dag_batched_replay_matches_scalar():
+    from repro.core.dag import dag_replayer_lists
+    smp = dag_replayer_lists(JOB2, seed=3)
+    kw = dict(think_ms=8000.0, h_users=3, seed=7, samples=smp, **FAST)
+    scalar = np.array([dag_response_time(JOB2, slots=s, **kw)
+                       for s in (4, 8)])
+    batched = response_time_batch([JOB2, JOB2], think_ms=8000.0,
+                                  slots=np.array([4, 8]), h_users=3,
+                                  seed=7, samples=smp, **FAST)
+    assert np.array_equal(scalar, batched)
+
+
+def test_dag_batched_counts_dispatches():
+    from repro.core import qn_sim
+    d0 = qn_sim.dispatch_count()
+    response_time_batch([JOB2, JOB2], think_ms=5000.0,
+                        slots=np.array([4, 8]), h_users=2, seed=1, **FAST)
+    assert qn_sim.dispatch_count() - d0 == 1     # ONE fused device call
+    d0 = qn_sim.dispatch_count()
+    dag_response_time(JOB2, slots=4, think_ms=5000.0, h_users=2, seed=1,
+                      **FAST)
+    assert qn_sim.dispatch_count() - d0 == FAST["replications"]
+
+
+def test_dag_event_budget_matches_scalar_scan():
+    # the admission-control price is exactly what the simulator scans
+    b = padded_event_budget(JOB3, min_jobs=8, warmup_jobs=3)
+    assert b & (b - 1) == 0                      # pow2-bucketed
+    per_job = 2 * sum(s.n_tasks for s in JOB3.stages) + 4
+    assert b >= 1.5 * per_job * (8 + 3)

@@ -1,0 +1,289 @@
+"""Workload-generic evaluation plane (PR 3).
+
+A class's performance model is pluggable (``repro.core.workload``):
+MapReduce profiles and Spark/Tez DAG chains flow through the SAME problem
+layer, analytic tiers, batched QN evaluator, hill climber, and
+multi-tenant service.  These tests pin the plane end-to-end:
+
+  * JSON round-trip of mixed problems;
+  * the analytic tier (KKT initial solution, AMVA frontier) prices DAG
+    classes;
+  * a mixed problem solves through ``DSpace4Cloud.run`` with every batched
+    DAG window estimate bit-identical to the scalar ``dag_response_time``
+    walk;
+  * mixed tenants fuse per workload kind in the service, warm-cache
+    resubmission stays at zero dispatches;
+  * the content-addressed cache keys kill the legacy scalar-evaluator
+    name-collision leak.
+"""
+import numpy as np
+import pytest
+
+from repro.core import qn_sim
+from repro.core.dag import dag_response_time
+from repro.core.evaluators import (
+    amva_frontier,
+    make_batched_qn_evaluator,
+    make_qn_evaluator,
+    workload_event_budget,
+)
+from repro.core.milp import initial_solution
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+from repro.core.workload import (
+    DagJob,
+    Stage,
+    profile_hash,
+    workload_from_dict,
+    workload_kind,
+    workload_to_dict,
+)
+from repro.service import JobState, SolverService
+
+VM = VMType(name="m4.xlarge", cores=4, sigma=0.07, pi=0.22,
+            containers_per_core=2)
+MR_PROF = JobProfile(n_map=24, n_reduce=6, m_avg=1400, m_max=2800,
+                     r_avg=650, r_max=1300)
+SPARK = DagJob("q7-spark", (Stage(24, 900, 2200), Stage(12, 700, 1700),
+                            Stage(8, 1100, 2600), Stage(4, 1500, 3200)))
+KW = dict(min_jobs=8, replications=1, seed=3)
+
+
+def mixed_problem(mr_deadline=20_000.0, dag_deadline=12_500.0) -> Problem:
+    return Problem(classes=[
+        ApplicationClass(name="bi", h_users=3, think_ms=9000.0,
+                         deadline_ms=mr_deadline, eta=0.3,
+                         profiles={VM.name: MR_PROF}),
+        ApplicationClass(name="spark-etl", h_users=3, think_ms=9000.0,
+                         deadline_ms=dag_deadline, eta=0.3,
+                         profiles={VM.name: SPARK}),
+    ], vm_types=[VM])
+
+
+def dag_problem(deadline=13_500.0, name="spark-etl", job=SPARK) -> Problem:
+    cls = ApplicationClass(name=name, h_users=3, think_ms=9000.0,
+                           deadline_ms=deadline, eta=0.3,
+                           profiles={VM.name: job})
+    return Problem(classes=[cls], vm_types=[VM])
+
+
+# ------------------------------------------------------------ problem layer
+
+def test_workload_json_roundtrip_mixed():
+    prob = mixed_problem()
+    text = prob.to_json()
+    back = Problem.from_json(text)
+    assert back.to_json() == text
+    assert isinstance(back.classes[0].profiles[VM.name], JobProfile)
+    assert isinstance(back.classes[1].profiles[VM.name], DagJob)
+    assert back.classes[1].profiles[VM.name] == SPARK
+
+
+def test_workload_dict_roundtrip_and_kinds():
+    assert workload_kind(MR_PROF) == "mapreduce"
+    assert workload_kind(SPARK) == "dag"
+    for w in (MR_PROF, SPARK):
+        assert workload_from_dict(workload_to_dict(w)) == w
+
+
+def test_dag_scaled_speed():
+    fast = SPARK.scaled(2.0)
+    assert fast.stages[0].t_avg == SPARK.stages[0].t_avg / 2.0
+    assert fast.stages[0].n_tasks == SPARK.stages[0].n_tasks
+    assert fast.total_work == pytest.approx(SPARK.total_work / 2.0)
+
+
+def test_profile_hash_separates_kinds_and_profiles():
+    ctx = dict(min_jobs=8, warmup_jobs=8, replications=1)
+    h_mr = profile_hash(MR_PROF, 9000.0, 3, 8, **ctx)
+    h_dag = profile_hash(SPARK, 9000.0, 3, 8, **ctx)
+    h_dag2 = profile_hash(
+        DagJob("x", SPARK.stages[:-1] + (Stage(4, 1501, 3200),)),
+        9000.0, 3, 8, **ctx)
+    assert len({h_mr, h_dag, h_dag2}) == 3
+
+
+# ----------------------------------------------------------- analytic tier
+
+def test_initial_solution_prices_dag_classes():
+    sols = initial_solution(mixed_problem())
+    assert set(sols) == {"bi", "spark-etl"}
+    for s in sols.values():
+        assert s.nu >= 1 and s.feasible
+
+
+def test_amva_frontier_generic_over_kinds():
+    cls = mixed_problem().classes[1]             # the DAG class
+    ts = amva_frontier(cls, VM, 1, 24)
+    assert np.all(np.isfinite(ts))
+    assert np.all(np.diff(ts) <= 1e-3)           # monotone non-increasing
+
+
+def test_event_budget_generic_over_kinds():
+    from repro.core.dag import padded_event_budget
+    assert workload_event_budget(SPARK, min_jobs=8, warmup_jobs=4) == \
+        padded_event_budget(SPARK, min_jobs=8, warmup_jobs=4)
+    assert workload_event_budget(MR_PROF, min_jobs=8, warmup_jobs=4) == \
+        qn_sim.padded_event_budget(MR_PROF.n_map, MR_PROF.n_reduce,
+                                   min_jobs=8, warmup_jobs=4)
+
+
+# ------------------------------------------------- optimizer, end to end
+
+def test_mixed_problem_solves_batched_with_scalar_parity():
+    """The acceptance criterion: a mixed problem solves end-to-end through
+    the batched optimizer, and every DAG window estimate the sweep used is
+    bit-identical to the scalar ``dag_response_time`` walk."""
+    prob = mixed_problem()
+    tool = DSpace4Cloud(prob, batched=True, window=6, **KW)
+    rep = tool.run()
+    assert all(s.feasible for s in rep.solutions.values())
+
+    cls = prob.classes[1]
+    for nu, t, _feas in rep.traces["spark-etl"].moves:
+        t_scalar = dag_response_time(
+            SPARK, slots=nu * VM.slots, think_ms=cls.think_ms,
+            h_users=cls.h_users, min_jobs=KW["min_jobs"], warmup_jobs=8,
+            seed=KW["seed"], replications=KW["replications"])
+        assert t == t_scalar, f"nu={nu}: batched {t} != scalar {t_scalar}"
+
+
+def test_mixed_problem_batched_matches_pointwise_gait():
+    prob = mixed_problem()
+    swept = DSpace4Cloud(prob, batched=True, window=6, **KW).run()
+    walked = DSpace4Cloud(prob, batched=False, **KW).run()
+    for name in ("bi", "spark-etl"):
+        assert abs(swept.solutions[name].nu - walked.solutions[name].nu) <= 2
+        assert swept.solutions[name].feasible == \
+            walked.solutions[name].feasible
+
+
+def test_batched_evaluator_fuses_one_dispatch_per_kind():
+    prob = mixed_problem()
+    ev = make_batched_qn_evaluator(min_jobs=8, warmup_jobs=4,
+                                   replications=1, seed=0)
+    items = [(prob.classes[0], VM, 2), (prob.classes[1], VM, 2),
+             (prob.classes[0], VM, 3), (prob.classes[1], VM, 3)]
+    ts = ev.evaluate_many(items)
+    assert ev.device_calls == 2                  # one per workload kind
+    assert ev.points_evaluated == 4
+    scalar = make_qn_evaluator(min_jobs=8, warmup_jobs=4, replications=1,
+                               seed=0)
+    assert ts == [scalar(c, v, n) for c, v, n in items]
+
+
+# ----------------------------------------------------------------- service
+
+def test_service_mixed_tenants_fuse_and_match_solo():
+    probs = {"mr+dag": mixed_problem(),
+             "dag": dag_problem(deadline=12_500.0)}
+    solo = {k: DSpace4Cloud(p, batched=True, window=6, **KW).run()
+            for k, p in probs.items()}
+
+    svc = SolverService(window=6)
+    jids = {k: svc.submit(p, **KW) for k, p in probs.items()}
+    jobs = svc.run_until_complete()
+    for k, jid in jids.items():
+        assert jobs[jid].state == JobState.DONE
+        assert jobs[jid].report.solutions == solo[k].solutions
+        for name in solo[k].traces:
+            assert jobs[jid].report.traces[name].moves == \
+                solo[k].traces[name].moves
+
+
+def test_service_mixed_warm_cache_resubmission_zero_dispatch(tmp_path):
+    spill = str(tmp_path / "cache.json")
+    svc = SolverService(window=6, cache_path=spill)
+    svc.submit(mixed_problem(), **KW)
+    svc.run_until_complete()
+
+    svc2 = SolverService(window=6, cache_path=spill)   # process restart
+    jid = svc2.submit(mixed_problem(), **KW)
+    d0 = qn_sim.dispatch_count()
+    jobs = svc2.run_until_complete()
+    assert jobs[jid].state == JobState.DONE
+    assert qn_sim.dispatch_count() - d0 == 0
+    assert svc2.scheduler.fused_dispatches == 0
+    assert svc2.cache.hit_rate == 1.0
+
+
+def test_service_replay_groups_split_by_stage_count():
+    """Two tenants reusing ONE (K, NS) replay array for chains of
+    different length must not land in one fused program (regression:
+    the shared-samples fusion group used to crash the whole round with
+    ``ValueError`` where each job solo would have completed)."""
+    from repro.core.dag import dag_replayer_lists, dag_response_time
+    job4, job2 = SPARK, DagJob("short", SPARK.stages[:2])
+    smp = dag_replayer_lists(SPARK, seed=5)      # 4 rows; reused by both
+    probs = {"long": dag_problem(deadline=13_500.0, job=job4),
+             "short": dag_problem(deadline=13_500.0, name="short",
+                                  job=job2)}
+    svc = SolverService(window=4)
+    jids = {k: svc.submit(p, samples={(p.classes[0].name, VM.name): smp},
+                          **KW) for k, p in probs.items()}
+    jobs = svc.run_until_complete()
+    for k, jid in jids.items():
+        assert jobs[jid].state in (JobState.DONE, JobState.INFEASIBLE)
+        cls = probs[k].classes[0]
+        nu, t, _ = jobs[jid].report.traces[cls.name].moves[0]
+        t_scalar = dag_response_time(
+            cls.profiles[VM.name], slots=nu * VM.slots,
+            think_ms=cls.think_ms, h_users=cls.h_users,
+            min_jobs=KW["min_jobs"], warmup_jobs=8, seed=KW["seed"],
+            replications=KW["replications"], samples=smp)
+        assert t == t_scalar
+
+
+def test_service_admission_prices_dag_jobs():
+    from repro.service import estimate_job_events
+    ev = estimate_job_events(dag_problem(), window=6, min_jobs=8,
+                             warmup_jobs=8, replications=1)
+    assert ev == 6 * 1 * workload_event_budget(SPARK, min_jobs=8,
+                                               warmup_jobs=8)
+
+
+# ------------------------------------------------- legacy cache-leak fix
+
+def test_scalar_evaluator_cache_is_content_addressed():
+    """Regression (PR-3 satellite): two problems reusing a class/VM *name*
+    against one shared cache dict must not exchange results.  The legacy
+    ``(cls.name, vm.name, nu)`` keys silently leaked the first problem's
+    estimate to the second; content-addressed keys cannot."""
+    a = ApplicationClass(name="prod", h_users=2, think_ms=8000.0,
+                         deadline_ms=60_000.0,
+                         profiles={VM.name: JobProfile(
+                             n_map=8, n_reduce=2, m_avg=1500, m_max=3000,
+                             r_avg=700, r_max=1500)})
+    b = ApplicationClass(name="prod", h_users=2, think_ms=8000.0,
+                         deadline_ms=60_000.0,
+                         profiles={VM.name: JobProfile(
+                             n_map=16, n_reduce=2, m_avg=1500, m_max=3000,
+                             r_avg=700, r_max=1500)})
+    shared: dict = {}
+    ev_a = make_qn_evaluator(min_jobs=6, warmup_jobs=4, replications=1,
+                             seed=3, cache=shared)
+    ev_b = make_qn_evaluator(min_jobs=6, warmup_jobs=4, replications=1,
+                             seed=3, cache=shared)
+    ta = ev_a(a, VM, 2)
+    tb = ev_b(b, VM, 2)
+    assert len(shared) == 2                      # two entries, no aliasing
+    assert ta != tb                              # twice the maps is slower
+    assert tb > ta
+
+
+def test_scalar_evaluator_shares_identical_content_across_names():
+    # flip side of content addressing: same workload under two names is ONE
+    # cache entry (the service's cross-tenant warm-start, now also in the
+    # in-process evaluators)
+    mk = lambda name: ApplicationClass(
+        name=name, h_users=2, think_ms=8000.0, deadline_ms=60_000.0,
+        profiles={VM.name: MR_PROF})
+    shared: dict = {}
+    ev = make_qn_evaluator(min_jobs=6, warmup_jobs=4, replications=1,
+                           seed=3, cache=shared)
+    t1 = ev(mk("alpha"), VM, 2)
+    d0 = qn_sim.dispatch_count()
+    t2 = ev(mk("beta"), VM, 2)
+    assert t1 == t2
+    assert qn_sim.dispatch_count() == d0         # served from the cache
+    assert len(shared) == 1
