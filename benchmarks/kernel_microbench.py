@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timer
+from benchmarks.common import emit
 
 
 def _time(fn, *args, reps=3):

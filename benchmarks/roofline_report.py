@@ -2,7 +2,6 @@
 bottleneck, model-FLOPs ratio — read from the dry-run record."""
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np

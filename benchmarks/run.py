@@ -37,6 +37,7 @@ def main() -> None:
         serving_qn_validation,
         table3_qn_validation,
         tpu_capacity_plan,
+        vm_race,
     )
     benches = {
         "table3": lambda: table3_qn_validation.run(quick=quick),
@@ -44,6 +45,7 @@ def main() -> None:
         "hc_convergence": lambda: hc_convergence.run(quick=quick),
         "batched_qn": lambda: batched_qn.run(quick=quick),
         "dag_sweep": lambda: dag_sweep.run(quick=quick),
+        "vm_race": lambda: vm_race.run(quick=quick),
         "service_throughput": lambda: service_throughput.run(quick=quick),
         "tpu_capacity_plan": lambda: tpu_capacity_plan.run(quick=quick),
         "roofline_report": lambda: roofline_report.run(quick=quick),

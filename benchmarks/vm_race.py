@@ -1,0 +1,165 @@
+"""Catalog-wide configuration racing: joint (VM type, nu) search at the
+QN tier versus the analytic-locked VM choice.
+
+Scenario: one class, a 4-entry VM catalog in which the analytic tier
+misranks the cheapest viable type ("turbo" profiled with pessimistic task
+maxima, which only the analytic B-term sees), plus a mid-price "value"
+type and an expensive "micro" type whose cost lower bound gets it pruned
+mid-race.  Three measurements:
+
+  1. locked baseline: ``race=False`` — today's analytic-argmin lock-in
+     (fused window sweeps on one lane);
+  2. raced: ``race=True`` — one sweep lane per analytically-feasible VM
+     type, all lanes of a round fused into one device call, lower-bound
+     pruning retiring hopeless lanes.  Asserted: the racer's verified
+     deployment is strictly cheaper than the locked one, total fused
+     dispatches stay <= 2x the locked run, and every lane's probed points
+     are bit-exact versus that lane's solo sweep;
+  3. single-type degeneracy: on a one-entry catalog ``race=True`` must
+     reproduce the locked run move-for-move at identical dispatch counts
+     (the PR-3 benchmarks BENCH_dag_sweep / BENCH_service_throughput keep
+     measuring the single-lane economics unchanged).
+
+Usage: PYTHONPATH=src python -m benchmarks.vm_race [--quick]
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timer
+from repro.core import qn_sim
+from repro.core.hillclimb import request_id, sweep_class
+from repro.core.milp import rank_vm_types
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+
+STEADY = VMType(name="steady", cores=2, sigma=0.05, pi=0.20)
+TURBO = VMType(name="turbo", cores=2, sigma=0.0425, pi=0.17)
+VALUE = VMType(name="value", cores=2, sigma=0.0475, pi=0.19)
+MICRO = VMType(name="micro", cores=1, sigma=0.15, pi=0.15)
+
+_BASE = dict(n_map=24, n_reduce=6, m_avg=2000, r_avg=900)
+
+
+def catalog_problem():
+    """Analytic ranking: steady < value < turbo < micro (turbo pushed back
+    by its pessimistic profiled maxima); QN truth: turbo is cheapest.
+
+    Returns ``(problem, samples)``: micro's lane runs in replay mode with
+    logged task durations about twice its profiled averages — the analytic
+    tier trusts the optimistic profile and seeds the lane far below the
+    true requirement, so at the QN tier the lane climbs, every infeasible
+    window raises its proven cost floor, and once that floor exceeds the
+    incumbent the lane is retired without further dispatches (lower-bound
+    pruning).  The replay lane also exercises the mixed fusion-group path:
+    each race round costs one dispatch per fusion group (non-replay lanes
+    + micro's replay group)."""
+    profiles = {
+        "steady": JobProfile(m_max=4000, r_max=1800, **_BASE),
+        "value": JobProfile(m_max=5600, r_max=2520, **_BASE),
+        "turbo": JobProfile(m_max=6000, r_max=2700, **_BASE),
+        "micro": JobProfile(m_max=2000, r_max=900, **_BASE),
+    }
+    cls = ApplicationClass(name="etl", h_users=4, think_ms=6000.0,
+                           deadline_ms=11_000.0, eta=0.25,
+                           profiles=profiles)
+    m_logged = [3600.0 + 40.0 * i for i in range(24)]      # avg ~4060 ms
+    r_logged = [1620.0 + 60.0 * i for i in range(6)]       # avg ~1770 ms
+    samples = {("etl", "micro"): (m_logged, r_logged)}
+    return Problem(classes=[cls],
+                   vm_types=[STEADY, TURBO, VALUE, MICRO]), samples
+
+
+def _solve(prob: Problem, race: bool, kw: dict, samples=None):
+    d0 = qn_sim.dispatch_count()
+    tool = DSpace4Cloud(prob, race=race, samples=samples, **kw)
+    with timer() as t:
+        rep = tool.run()
+    sol = rep.solutions["etl"]
+    return rep, {
+        "vm_type": sol.vm_type, "nu": sol.nu,
+        "cost_per_h": sol.cost_per_h, "feasible": sol.feasible,
+        "dispatches": qn_sim.dispatch_count() - d0,
+        "evals": rep.evals, "wall_s": t.s,
+    }
+
+
+def _lane_parity(prob: Problem, raced_rep, kw: dict, samples=None) -> bool:
+    """Every point the race probed must be bit-exact versus a solo sweep
+    of the same lane (same seed, fresh evaluator)."""
+    cls = prob.classes[0]
+    ranking = {s.vm_type: s for s in rank_vm_types(prob)["etl"]}
+    for vm in prob.vm_types:
+        rid = request_id("etl", vm.name)
+        if rid not in raced_rep.traces:
+            continue                     # analytically infeasible: no lane
+        from repro.core.hillclimb import HCTrace
+        tr = HCTrace(cls="etl")
+        solo_kw = {k: kw[k] for k in ("min_jobs", "replications", "seed")}
+        ev = DSpace4Cloud(Problem(classes=[cls], vm_types=[vm]),
+                          window=kw["window"], samples=samples,
+                          **solo_kw).evaluate
+        sweep_class(cls, vm, ranking[vm.name].nu, ev,
+                    window=kw["window"], trace=tr)
+        race_moves = raced_rep.traces[rid].moves
+        # a pruned lane probed a prefix of its solo sweep; an unpruned
+        # lane probed exactly the solo sweep
+        if tr.moves[:len(race_moves)] != race_moves:
+            return False
+        if not raced_rep.traces[rid].pruned and tr.moves != race_moves:
+            return False
+    return True
+
+
+def run(quick: bool = False):
+    kw = dict(min_jobs=8 if quick else 20,
+              replications=1 if quick else 2, seed=3, window=8)
+    prob, samples = catalog_problem()
+
+    _, locked = _solve(prob, race=False, kw=kw, samples=samples)
+    raced_rep, raced = _solve(prob, race=True, kw=kw, samples=samples)
+    parity = _lane_parity(prob, raced_rep, kw, samples=samples)
+    lanes = {rid: {"bound": tr.lane_bound, "pruned": tr.pruned,
+                   "evals": tr.evals}
+             for rid, tr in raced_rep.traces.items()}
+
+    assert parity, "raced lane points diverged from solo sweeps"
+    assert raced["cost_per_h"] < locked["cost_per_h"], \
+        "racer failed to beat the analytic-locked choice"
+    assert raced["dispatches"] <= 2 * max(locked["dispatches"], 1), \
+        f"race cost {raced['dispatches']} dispatches > " \
+        f"2x locked {locked['dispatches']}"
+
+    # single-type catalog: racing degenerates to the locked run unchanged
+    single = Problem(classes=prob.classes, vm_types=[STEADY])
+    _, single_locked = _solve(single, race=False, kw=kw)
+    single_raced_rep, single_raced = _solve(single, race=True, kw=kw)
+    degenerate = (
+        single_raced["dispatches"] == single_locked["dispatches"]
+        and single_raced["vm_type"] == single_locked["vm_type"]
+        and single_raced["nu"] == single_locked["nu"]
+        and single_raced["cost_per_h"] == single_locked["cost_per_h"])
+    assert degenerate, "single-type catalog did not degenerate to locked"
+
+    out = {
+        "catalog_size": len(prob.vm_types),
+        "locked": locked, "raced": raced, "lanes": lanes,
+        "single_type": {"locked": single_locked, "raced": single_raced},
+        "saving_per_h": locked["cost_per_h"] - raced["cost_per_h"],
+        "dispatch_ratio": raced["dispatches"] / max(locked["dispatches"], 1),
+        "lanes_pruned": sum(1 for v in lanes.values() if v["pruned"]),
+        "parity_bit_exact": parity,
+        "degenerate_single_type": degenerate,
+    }
+    emit("vm_race", raced["wall_s"] * 1e6,
+         f"cost={locked['cost_per_h']:.3f}->{raced['cost_per_h']:.3f}"
+         f"({locked['vm_type']}->{raced['vm_type']});"
+         f"dispatches={locked['dispatches']}->{raced['dispatches']}"
+         f"(x{out['dispatch_ratio']:.1f});"
+         f"pruned={out['lanes_pruned']}/{len(lanes)};"
+         f"parity={parity};single_type_degenerate={degenerate}",
+         metrics=out)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

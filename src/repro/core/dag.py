@@ -29,7 +29,7 @@ from __future__ import annotations
 import heapq
 import math
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

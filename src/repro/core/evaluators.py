@@ -36,7 +36,7 @@ import numpy as np
 from repro.core import dag as dag_mod
 from repro.core import qn_sim
 from repro.core.mva import job_response, ps_response_batch, workload_demand
-from repro.core.problem import ApplicationClass, Problem, VMType
+from repro.core.problem import ApplicationClass, VMType
 from repro.core.workload import (
     DAG,
     profile_hash,
@@ -357,3 +357,35 @@ def amva_frontier(cls: ApplicationClass, vm: VMType, nu_lo: int, nu_hi: int,
         except Exception:
             pass
     return np.asarray(ps_response_batch(a_over_c, bb, think, h))
+
+
+def amva_nu_seed(cls: ApplicationClass, vm: VMType, nu0: int,
+                 span: int, *, max_nu: int = 8192,
+                 use_kernel: bool = True) -> int:
+    """AMVA-frontier seed for one QN search lane: the smallest nu in a
+    window around the analytic proposal ``nu0`` whose frontier response
+    time meets the deadline.
+
+    The window starts asymmetric — ``[nu0 - span//2, nu0 + span]`` —
+    because the analytic proposal usually *under*shoots (the smooth model
+    is optimistic) and the sweep above recovers cheaply.  When the proposal
+    *over*shoots instead, the whole window can sit above the true frontier
+    and its feasible minimum lands on the lower edge; in that case the
+    window is re-anchored downward (keeping the known-feasible edge) until
+    the minimum is interior or nu hits 1, so a pessimistic seed can no
+    longer hide the frontier below the window.  Frontier calls are
+    analytic (one batched AMVA evaluation each) — no simulator dispatches.
+    """
+    span = max(2, span)
+    lo = max(1, int(nu0) - span // 2)
+    hi = min(max_nu, int(nu0) + span)
+    while True:
+        ts = amva_frontier(cls, vm, lo, hi, use_kernel=use_kernel)
+        feas = np.where(ts <= cls.deadline_ms)[0]
+        if len(feas) == 0:
+            return hi                       # infeasible window: sweep climbs
+        nu_star = lo + int(feas[0])
+        if nu_star > lo or lo == 1:
+            return nu_star                  # interior (or floor) minimum
+        hi = nu_star                        # feasible on the lower edge:
+        lo = max(1, hi - span)              # look below, keep the edge

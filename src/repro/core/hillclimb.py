@@ -17,6 +17,16 @@ evaluator is monotone in nu, at a fraction of the dispatches.
 ``hill_climb`` picks the gait automatically from the evaluator's
 capabilities.
 
+``race_requests`` lifts the single-lane sweep to a *raced portfolio*: one
+``sweep_requests`` lane per analytically-feasible VM type, advanced in
+lockstep rounds so every lane's window can share one fused device call,
+with cost-lower-bound pruning — a lane whose ``optimal_mix`` cost at its
+analytic minimum nu already exceeds the incumbent's QN-verified cost is
+retired without further dispatches.  The accurate tier therefore owns the
+VM-type decision, not just nu: a misranking by the analytic model is
+corrected instead of frozen in.  With a single-entry catalog the race
+degenerates to exactly the solo sweep.
+
 The climber is workload-agnostic by construction: it only ever talks to
 the evaluator through ``(cls, vm, nu)`` probes and never inspects profile
 fields, so classes whose workload is a Spark/Tez DAG chain climb exactly
@@ -27,9 +37,11 @@ from __future__ import annotations
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.pricing import optimal_mix
+import numpy as np
+
+from repro.core.pricing import mix_cost, optimal_mix
 from repro.core.problem import (
     ApplicationClass,
     ClassSolution,
@@ -41,12 +53,21 @@ from repro.core.problem import (
 Evaluator = Callable[[ApplicationClass, VMType, int], float]
 
 
+def request_id(cls_name: str, vm_name: str) -> str:
+    """Identity of one (class, VM type) search lane — the unit pending work
+    is keyed by across ``run_steps``, the racer, and the solver service."""
+    return f"{cls_name}@{vm_name}"
+
+
 @dataclass
 class HCTrace:
     cls: str
     moves: List[Tuple[int, float, bool]] = field(default_factory=list)
     evals: int = 0
     wall_s: float = 0.0
+    vm: Optional[str] = None          # lane VM type (raced runs)
+    lane_bound: Optional[float] = None  # analytic cost lower bound of lane
+    pruned: bool = False              # retired by lower-bound pruning
 
 
 def _solution(cls: ApplicationClass, vm: VMType, nu: int,
@@ -194,6 +215,167 @@ def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
         except StopIteration as stop:
             return stop.value
         ts = evaluator.evaluate_frontier(cls, vm, nus)
+
+
+@dataclass
+class _Lane:
+    """One VM type's sweep inside a race."""
+    vm: VMType
+    gen: object                       # the sweep_requests generator
+    nu0: int                          # analytic minimum nu (the seed)
+    rank: int                         # position in the analytic ranking
+    trace: HCTrace
+    nus: Optional[List[int]] = None   # pending window proposal
+    result: Optional[ClassSolution] = None
+    pruned: bool = False
+    max_infeasible: int = 0           # largest nu probed infeasible so far
+    refuted: bool = False             # feasible probe seen below nu0
+
+    def floor(self) -> int:
+        """Smallest nu this lane can still end at, given its evidence: the
+        proven QN infeasibility floor, raised to the analytic minimum only
+        while the lane's own probes have not refuted it (a feasible point
+        below the analytic nu0 proves the analytic model pessimistic for
+        this VM type, so its floor must no longer constrain the bound)."""
+        floor = self.max_infeasible + 1
+        if not self.refuted:
+            floor = max(floor, self.nu0)
+        return max(1, floor)
+
+    def observe(self, cls: ApplicationClass, nus, ts) -> None:
+        for n, t in zip(nus, ts):
+            if t <= cls.deadline_ms:
+                if n < self.nu0:
+                    self.refuted = True
+            else:
+                self.max_infeasible = max(self.max_infeasible, int(n))
+        self.trace.lane_bound = mix_cost(self.floor(), cls.eta, self.vm)
+
+
+def race_requests(cls: ApplicationClass,
+                  lanes: Sequence[Tuple[VMType, int]], *,
+                  window: int = 16, max_nu: int = 8192,
+                  stall_windows: int = 2,
+                  traces: Optional[Dict[str, HCTrace]] = None):
+    """Resumable propose/receive racer over per-VM-type sweep lanes.
+
+    ``lanes`` is the analytic candidate ranking of one class, cheapest
+    first: ``(vm, nu0)`` pairs where ``nu0`` is the VM type's analytic
+    minimum nu (``milp.rank_vm_types``).  One ``sweep_requests`` lane runs
+    per entry; each round *proposes* every active lane's window as a list
+    of ``(vm, nus)`` pairs (``yield``) and *receives* the aligned response
+    times as a ``{vm_name: ts}`` mapping (``send``).  Returns the winning
+    ``ClassSolution`` as the ``StopIteration`` value.  Like the sweep it
+    drives, the racer never evaluates anything itself — whoever drives it
+    owns dispatch timing, so all lanes of a round (and, in the service, of
+    many tenants) can share fused device calls.
+
+    Race semantics:
+
+      * every probed point is evaluated by the same evaluator a solo sweep
+        of that lane would use, so per-point estimates are bit-exact versus
+        the un-raced run;
+      * *lower-bound pruning*: each lane carries a cost lower bound — the
+        ``optimal_mix`` cost at the smallest nu the lane can still end at.
+        That floor starts at the lane's analytic minimum nu and is updated
+        from the lane's own QN evidence each round: probed infeasible
+        points raise it (final nu > largest infeasible nu, feasibility
+        being monotone in nu), while a feasible probe *below* the analytic
+        minimum refutes the analytic floor entirely (the analytic model
+        proved pessimistic for this VM type — only the QN infeasibility
+        floor constrains the bound from then on).  Once some lane finishes
+        with a QN-verified feasible solution (the incumbent), any
+        unfinished lane whose bound strictly exceeds the incumbent's cost
+        is retired without further dispatches.  A lane whose bound still
+        beats the incumbent is never discarded (property-tested), and with
+        a noise-free monotone evaluator the post-evidence bound is a true
+        lower bound — the eventual winner can never be pruned;
+      * the winner is the cheapest verified-feasible lane (ties broken by
+        analytic rank); if no lane verifies feasible, the analytically
+        cheapest lane's verdict is returned — with a single-entry catalog
+        this degenerates to exactly today's solo sweep.
+    """
+    entries: List[_Lane] = []
+    for rank, (vm, nu0) in enumerate(lanes):
+        nu0 = max(1, int(nu0))
+        tr = HCTrace(cls=cls.name, vm=vm.name,
+                     lane_bound=mix_cost(nu0, cls.eta, vm))
+        if traces is not None:
+            traces[request_id(cls.name, vm.name)] = tr
+        gen = sweep_requests(cls, vm, nu0, window=window, max_nu=max_nu,
+                             stall_windows=stall_windows, trace=tr)
+        # sweep_requests always proposes at least one window first, so the
+        # priming next() cannot raise StopIteration
+        entries.append(_Lane(vm=vm, gen=gen, nu0=nu0,
+                             rank=rank, trace=tr, nus=next(gen)))
+    incumbent: Optional[ClassSolution] = None
+    while True:
+        active = [ln for ln in entries
+                  if ln.result is None and not ln.pruned]
+        if not active:
+            break
+        results: Mapping = yield [(ln.vm, list(ln.nus)) for ln in active]
+        for lane in active:
+            ts = results[lane.vm.name]
+            lane.observe(cls, lane.nus, ts)
+            try:
+                lane.nus = lane.gen.send(ts)
+            except StopIteration as stop:
+                lane.result = stop.value
+                if lane.result.feasible and (
+                        incumbent is None
+                        or lane.result.cost_per_h < incumbent.cost_per_h):
+                    incumbent = lane.result
+        if incumbent is not None:
+            for lane in entries:
+                if lane.result is None and not lane.pruned \
+                        and lane.trace.lane_bound > incumbent.cost_per_h:
+                    lane.pruned = True
+                    lane.trace.pruned = True
+                    lane.gen.close()
+    finished = [ln for ln in entries
+                if ln.result is not None and ln.result.feasible]
+    if finished:
+        return min(finished,
+                   key=lambda ln: (ln.result.cost_per_h, ln.rank)).result
+    # nothing verified feasible => no incumbent => no lane was pruned, so
+    # the analytically-cheapest lane ran to completion
+    return entries[0].result
+
+
+def race_class(cls: ApplicationClass, lanes: Sequence[Tuple[VMType, int]],
+               evaluator, *, window: int = 16, max_nu: int = 8192,
+               stall_windows: int = 2,
+               traces: Optional[Dict[str, HCTrace]] = None) -> ClassSolution:
+    """Single-job driver of ``race_requests``: each round's lane windows are
+    satisfied with ONE fused ``evaluate_many`` call when the evaluator can
+    fuse across VM types (``BatchedQNEvaluator``), per-lane
+    ``evaluate_frontier`` calls otherwise, and scalar probes as the last
+    resort."""
+    gen = race_requests(cls, lanes, window=window, max_nu=max_nu,
+                        stall_windows=stall_windows, traces=traces)
+    results = None
+    while True:
+        try:
+            props = gen.send(results) if results is not None else next(gen)
+        except StopIteration as stop:
+            return stop.value
+        results = {}
+        if hasattr(evaluator, "evaluate_many"):
+            flat = [(cls, vm, int(n)) for vm, nus in props for n in nus]
+            ts = evaluator.evaluate_many(flat)
+            at = 0
+            for vm, nus in props:
+                results[vm.name] = np.asarray(ts[at:at + len(nus)], float)
+                at += len(nus)
+        elif hasattr(evaluator, "evaluate_frontier"):
+            for vm, nus in props:
+                results[vm.name] = np.asarray(
+                    evaluator.evaluate_frontier(cls, vm, nus), float)
+        else:
+            for vm, nus in props:
+                results[vm.name] = np.asarray(
+                    [evaluator(cls, vm, int(n)) for n in nus], float)
 
 
 def refine_class(cls: ApplicationClass, vm: VMType, nu0: int,

@@ -10,6 +10,13 @@ stationary point of the relaxed convex program, then ceil-restored to
 integrality), independently per class and per VM type, then pick the
 cheapest feasible VM type (the outer x_ij choice).
 
+``rank_vm_types`` keeps the *whole* per-class candidate ranking, not just
+the argmin: the QN-tier racer (``hillclimb.race_requests``) seeds one
+search lane per analytically-feasible VM type, so a misranking by this
+approximate model is corrected by the accurate simulator instead of being
+frozen in (``initial_solution`` is the ranking's head and preserves the
+paper's outer x_ij choice exactly).
+
 Workload-generic: the bisection prices candidates through
 ``mva.workload_demand``, so classes whose profile is a Tez/Spark DAG chain
 get the same KKT initial point as MapReduce classes (T_est(c) = A/c + B is
@@ -18,7 +25,7 @@ monotone in c for every kind).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.core.mva import job_response, min_slots_for_deadline
 from repro.core.pricing import optimal_mix
@@ -41,21 +48,32 @@ def initial_class_solution(cls: ApplicationClass, vm: VMType,
                          feasible=t <= cls.deadline_ms)
 
 
-def initial_solution(problem: Problem,
-                     max_vms: int = 4096) -> Dict[str, ClassSolution]:
-    """Per class: cheapest feasible (vm type, nu) under the analytic model."""
-    out: Dict[str, ClassSolution] = {}
+def rank_vm_types(problem: Problem,
+                  max_vms: int = 4096) -> Dict[str, List[ClassSolution]]:
+    """Per class: every analytically-feasible (vm type, nu) candidate,
+    sorted by analytic cost ascending (the sort is stable, so catalog order
+    breaks ties — ``ranking[name][0]`` is exactly ``initial_solution``'s
+    pick).  Each entry's ``cost_per_h`` is the ``optimal_mix`` cost at the
+    analytic minimum nu: the cost lower bound the racer prunes lanes with.
+    """
+    out: Dict[str, List[ClassSolution]] = {}
     for cls in problem.classes:
-        best: Optional[ClassSolution] = None
-        for vm in problem.vm_types:
-            sol = initial_class_solution(cls, vm, max_vms=max_vms)
-            if sol is None:
-                continue
-            if best is None or sol.cost_per_h < best.cost_per_h:
-                best = sol
-        if best is None:
+        cands = [sol for vm in problem.vm_types
+                 if (sol := initial_class_solution(cls, vm,
+                                                   max_vms=max_vms))
+                 is not None]
+        if not cands:
             raise ValueError(
                 f"class {cls.name}: no feasible configuration below "
                 f"{max_vms} VMs of any type")
-        out[cls.name] = best
+        cands.sort(key=lambda s: s.cost_per_h)
+        out[cls.name] = cands
     return out
+
+
+def initial_solution(problem: Problem,
+                     max_vms: int = 4096) -> Dict[str, ClassSolution]:
+    """Per class: cheapest feasible (vm type, nu) under the analytic model
+    (the head of ``rank_vm_types``)."""
+    return {name: cands[0] for name, cands
+            in rank_vm_types(problem, max_vms=max_vms).items()}

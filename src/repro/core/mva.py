@@ -28,12 +28,10 @@ for the batched AMVA Pallas kernel (repro.kernels.amva).
 """
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.problem import JobProfile
 from repro.core.workload import DAG, workload_kind

@@ -2,44 +2,51 @@
 
 JSON problem description in -> Initial Solution Builder (analytic/KKT) ->
 Parallel Local Search Optimizer (hill climbing on the QN simulator) ->
-JSON solution out.  By default the optimizer runs in *batched* mode: a
-``BatchedQNEvaluator`` sweeps whole nu windows per fused device call
-instead of paying one XLA dispatch per probe (``batched=False`` restores
-the paper-faithful point-wise walk; per-point estimates are identical for
-the same seed, though under simulation noise the two gaits can settle a
-point or two apart — see ``sweep_class``).
+JSON solution out.  By default the optimizer runs in *batched, raced*
+mode: a ``BatchedQNEvaluator`` sweeps whole nu windows per fused device
+call, and — catalog permitting — the VM-type decision is raced at the QN
+tier too: the analytic ranking (``milp.rank_vm_types``) seeds one sweep
+lane per feasible VM type and ``hillclimb.race_requests`` advances them in
+lockstep rounds with cost-lower-bound pruning, so an analytic misranking
+is corrected by the accurate simulator instead of frozen in
+(``race=False`` restores the analytic-locked VM choice; ``batched=False``
+restores the paper-faithful point-wise walk on the locked choice.
+Per-point estimates are identical for the same seed across all gaits,
+though under simulation noise sweep and walk can settle a point or two
+apart — see ``sweep_class``).
 ``run_fast`` adds the beyond-paper batched-AMVA frontier pass: the AMVA
-frontier proposes nu*, then ONE batched QN call verifies the whole window
-around it (orders of magnitude fewer simulator dispatches — benchmarked in
-benchmarks/hc_convergence.py and benchmarks/batched_qn.py).
+frontier re-seeds every lane (``evaluators.amva_nu_seed``), then fused QN
+window calls verify the race (orders of magnitude fewer simulator
+dispatches — benchmarked in benchmarks/hc_convergence.py,
+benchmarks/batched_qn.py and benchmarks/vm_race.py).
 
 Workload-generic: a ``Problem`` may mix MapReduce classes and Spark/Tez
 DAG classes — the initial solution prices both through
 ``mva.workload_demand``, and the batched evaluator routes each window to
 its kind's fused simulator (``evaluators.fused_eval_call``).  The
 MapReduce path is unchanged bit-for-bit; DAG windows get the same
-one-dispatch-per-window economics (benchmarks/dag_sweep.py).
+one-dispatch-per-window economics (benchmarks/dag_sweep.py), and DAG
+classes race across VM types exactly like MapReduce classes (the
+evaluator owns the kind dispatch).
 """
 from __future__ import annotations
 
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import qn_sim
 from repro.core.evaluators import (
-    amva_frontier,
+    amva_nu_seed,
     make_batched_qn_evaluator,
     make_qn_evaluator,
-    mva_evaluator,
 )
-from repro.core.hillclimb import HCTrace, hill_climb, refine_class, \
-    sweep_requests
-from repro.core.milp import initial_solution
-from repro.core.pricing import optimal_mix
+from repro.core.hillclimb import HCTrace, hill_climb, race_class, \
+    race_requests, request_id
+from repro.core.milp import rank_vm_types
 from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
     VMType, solution_cost
 
@@ -47,10 +54,16 @@ from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
 @dataclass
 class EvalRequest:
     """One pending window of a resumable run: evaluate ``nus`` for
-    (``cls``, ``vm``) and send the aligned response times back."""
+    (``cls``, ``vm``) and send the aligned response times back, keyed by
+    ``rid``.  Since the racer, one class may have several lanes in flight —
+    pending work is identified by (class x vm), never by class name."""
     cls: ApplicationClass
     vm: VMType
     nus: list
+
+    @property
+    def rid(self) -> str:
+        return request_id(self.cls.name, self.vm.name)
 
 
 @dataclass
@@ -102,28 +115,40 @@ class DSpace4Cloud:
 
     def __init__(self, problem: Problem, *, min_jobs: int = 40,
                  replications: int = 2, seed: int = 0, samples=None,
-                 batched: bool = True, window: int = 16):
+                 batched: bool = True, window: int = 16,
+                 race: bool = True):
         self.problem = problem
         self.window = window
         self.batched = batched
+        self.race = race
         self._qn_cache: dict = {}
         maker = make_batched_qn_evaluator if batched else make_qn_evaluator
         self.evaluate = maker(
             min_jobs=min_jobs, replications=replications, seed=seed,
             cache=self._qn_cache, samples=samples)
 
+    def _ranking(self) -> Dict[str, List[ClassSolution]]:
+        """Per-class analytic candidate ranking; truncated to the argmin
+        when racing is off (single lane == pre-race behaviour)."""
+        ranking = rank_vm_types(self.problem)
+        if not self.race:
+            ranking = {name: cands[:1] for name, cands in ranking.items()}
+        return ranking
+
     # ----------------------------------------------------- resumable steps
     def run_steps(self):
         """Resumable propose/receive form of ``run()`` (batched gait).
 
         A generator over scheduling rounds: each round *yields* the list of
-        pending ``EvalRequest`` windows (one per still-converging class) and
-        expects ``send()`` of a ``{class_name: response_time_array}`` dict
-        covering every yielded request.  Returns the ``RunReport`` as the
-        ``StopIteration`` value.  The caller owns dispatch timing — ``run()``
-        satisfies each round with one fused ``evaluate_many`` call, while the
-        multi-tenant service interleaves rounds of many jobs so their windows
-        share device dispatches (``repro.service``).
+        pending ``EvalRequest`` windows — one per still-racing (class, VM
+        type) lane — and expects ``send()`` of a
+        ``{request.rid: response_time_array}`` dict covering every yielded
+        request.  Returns the ``RunReport`` as the ``StopIteration`` value.
+        The caller owns dispatch timing — ``run()`` satisfies each round
+        with one fused ``evaluate_many`` call (so all lanes of all classes
+        share each round's device calls), while the multi-tenant service
+        interleaves rounds of many jobs so their windows share dispatches
+        across tenants too (``repro.service``).
 
         The report's ``qn_dispatches``/``wall_s`` are measured across this
         job's lifetime from the process-wide counter and clock: exact for a
@@ -134,50 +159,59 @@ class DSpace4Cloud:
         """
         t0 = time.time()
         d0 = qn_sim.dispatch_count()
-        init = initial_solution(self.problem)
-        gens: Dict[str, tuple] = {}
-        pending: Dict[str, EvalRequest] = {}
+        ranking = self._ranking()
+        init = {name: cands[0] for name, cands in ranking.items()}
+        racers: Dict[str, object] = {}
+        proposed: Dict[str, List[EvalRequest]] = {}
         sols: Dict[str, ClassSolution] = {}
         traces: Dict[str, HCTrace] = {}
         for cls in self.problem.classes:
-            vm = self.problem.vm_by_name(init[cls.name].vm_type)
-            tr = HCTrace(cls=cls.name)
-            traces[cls.name] = tr
-            g = sweep_requests(cls, vm, init[cls.name].nu,
-                               window=self.window, trace=tr)
-            # sweep_requests always proposes at least one window before
-            # returning, so the first next() cannot raise StopIteration
-            pending[cls.name] = EvalRequest(cls=cls, vm=vm, nus=next(g))
-            gens[cls.name] = (g, cls, vm)
-        while pending:
-            results = yield list(pending.values())
-            nxt: Dict[str, EvalRequest] = {}
-            for name, req in pending.items():
-                g, cls, vm = gens[name]
+            lanes = [(self.problem.vm_by_name(c.vm_type), c.nu)
+                     for c in ranking[cls.name]]
+            g = race_requests(cls, lanes, window=self.window, traces=traces)
+            # race_requests always proposes at least one round before
+            # returning, so the priming next() cannot raise StopIteration
+            props = next(g)
+            racers[cls.name] = g
+            proposed[cls.name] = [EvalRequest(cls=cls, vm=vm, nus=nus)
+                                  for vm, nus in props]
+        while proposed:
+            results = yield [r for reqs in proposed.values() for r in reqs]
+            nxt: Dict[str, List[EvalRequest]] = {}
+            for name, reqs in proposed.items():
+                lane_ts = {r.vm.name: np.asarray(results[r.rid])
+                           for r in reqs}
                 try:
-                    nus = g.send(np.asarray(results[name]))
-                    nxt[name] = EvalRequest(cls=cls, vm=vm, nus=nus)
+                    props = racers[name].send(lane_ts)
+                    nxt[name] = [EvalRequest(cls=reqs[0].cls, vm=vm, nus=nus)
+                                 for vm, nus in props]
                 except StopIteration as stop:
                     sols[name] = stop.value
-            pending = nxt
+            proposed = nxt
         return _report(sols, traces, init, t0, d0)
 
     # ------------------------------------------------------------- classic
     def run(self, parallel: bool = True) -> RunReport:
-        """MINLP-tier initial solution + QN-driven HC (Algorithm 1; the
-        window-sweep gait when the evaluator is batched).
+        """MINLP-tier candidate ranking + QN-driven raced HC (Algorithm 1
+        per lane; the window-sweep gait when the evaluator is batched).
 
         In batched mode this drives ``run_steps``: every scheduling round's
-        windows — across ALL classes — are satisfied with one
-        ``evaluate_many`` call, so classes sharing a fusion group
-        (``h_users``, replay lists) also share device dispatches within a
-        single run.  ``parallel`` only affects the point-wise scalar gait."""
+        windows — across ALL classes and ALL racing VM-type lanes — are
+        satisfied with one ``evaluate_many`` call, so lanes sharing a
+        fusion group (workload kind, ``h_users``, replay lists) also share
+        device dispatches within a single run.  ``parallel`` only affects
+        the point-wise scalar gait, which keeps the paper-verbatim
+        analytic-locked VM choice."""
         if not self.batched:
             t0 = time.time()
             d0 = qn_sim.dispatch_count()
-            init = initial_solution(self.problem)
-            sols, traces = hill_climb(self.problem, init, self.evaluate,
-                                      parallel=parallel, window=self.window)
+            init = {name: cands[0]
+                    for name, cands in self._ranking().items()}
+            sols, hc_traces = hill_climb(self.problem, init, self.evaluate,
+                                         parallel=parallel,
+                                         window=self.window)
+            traces = {request_id(name, init[name].vm_type): tr
+                      for name, tr in hc_traces.items()}
             return _report(sols, traces, init, t0, d0)
 
         gen = self.run_steps()
@@ -192,33 +226,34 @@ class DSpace4Cloud:
             ts = self.evaluate.evaluate_many(flat)
             results, at = {}, 0
             for r in reqs:
-                results[r.cls.name] = np.asarray(ts[at:at + len(r.nus)])
+                results[r.rid] = np.asarray(ts[at:at + len(r.nus)])
                 at += len(r.nus)
 
     # ---------------------------------------------------------- fast mode
     def run_fast(self, frontier_span: int = 64) -> RunReport:
-        """Beyond-paper: AMVA frontier proposes, QN verifies, HC polishes.
+        """Beyond-paper: the AMVA frontier re-seeds every racing lane
+        (``amva_nu_seed`` — re-anchoring downward when the analytic
+        proposal overshoots), then the QN race verifies from those seeds.
 
-        With the batched evaluator the verification is ONE fused QN call
-        over the window around the AMVA proposal (instead of a scalar probe
-        loop): typically 1-2 simulator dispatches per class, total."""
+        With the batched evaluator each round of a class's race is ONE
+        fused QN call across its surviving lanes (instead of a scalar
+        probe loop): typically one fused dispatch per race round per
+        fusion group — 2-3 per class total, catalog-wide (see
+        results/BENCH_hc_convergence.json / BENCH_vm_race.json)."""
         t0 = time.time()
         d0 = qn_sim.dispatch_count()
-        init = initial_solution(self.problem)
+        ranking = self._ranking()
+        init = {name: cands[0] for name, cands in ranking.items()}
         sols: Dict[str, ClassSolution] = {}
         traces: Dict[str, HCTrace] = {}
         for cls in self.problem.classes:
-            vm = self.problem.vm_by_name(init[cls.name].vm_type)
-            nu0 = init[cls.name].nu
-            lo = max(1, nu0 - frontier_span // 2)
-            hi = nu0 + frontier_span
-            ts = amva_frontier(cls, vm, lo, hi)
-            feas = np.where(ts <= cls.deadline_ms)[0]
-            nu_star = (lo + int(feas[0])) if len(feas) else hi
-            tr = HCTrace(cls=cls.name)
-            sols[cls.name] = refine_class(cls, vm, nu_star, self.evaluate,
-                                          window=self.window, trace=tr)
-            traces[cls.name] = tr
+            lanes = []
+            for cand in ranking[cls.name]:
+                vm = self.problem.vm_by_name(cand.vm_type)
+                lanes.append((vm, amva_nu_seed(cls, vm, cand.nu,
+                                               frontier_span)))
+            sols[cls.name] = race_class(cls, lanes, self.evaluate,
+                                        window=self.window, traces=traces)
         return _report(sols, traces, init, t0, d0)
 
     # ------------------------------------------------------------ file API

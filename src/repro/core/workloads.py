@@ -16,7 +16,6 @@ CINECA PICO 20-core node (1 container/core, faster cores).
 from __future__ import annotations
 
 import json
-import math
 import os
 from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple

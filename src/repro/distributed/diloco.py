@@ -20,7 +20,6 @@ averaging is the only cross-pod collective).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, Tuple
 
 import jax

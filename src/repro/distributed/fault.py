@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import signal
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np

@@ -12,7 +12,7 @@ ever materializing 340B parameters on the CPU host.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax

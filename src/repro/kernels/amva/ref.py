@@ -1,7 +1,6 @@
 """Pure-jnp oracle: the batched PS fixed point from the core module."""
 from __future__ import annotations
 
-import jax
 
 from repro.core.mva import ps_response_batch
 

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

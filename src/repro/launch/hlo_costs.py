@@ -22,7 +22,6 @@ the post-SPMD compiled per-device HLO (collectives present).
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

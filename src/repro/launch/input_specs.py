@@ -6,8 +6,7 @@ dry-run lower+compile 340B-parameter cells on a CPU host.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,9 +18,8 @@ Hardware constants: v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 from __future__ import annotations
 
 import json
-import math
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -29,7 +28,7 @@ ICI_BW = 50e9
 
 def active_param_count(cfg) -> float:
     """Per-token active parameters (MoE counts shared + top_k experts)."""
-    from repro.distributed.sharding import param_count, tree_map_specs
+    from repro.distributed.sharding import param_count
     from repro.models import api
 
     total = param_count(api.param_specs(cfg))

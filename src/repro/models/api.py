@@ -1,10 +1,9 @@
 """Family-dispatched model API — one entry point for every assigned arch."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import encdec, transformer

@@ -6,7 +6,7 @@ real.  Decode caches: ring-buffer self-KV + static cross-KV.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ compile on every mesh; the roofline shows their different collective costs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

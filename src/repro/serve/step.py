@@ -1,7 +1,7 @@
 """Serving steps: prefill (builds caches) and decode (one token)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

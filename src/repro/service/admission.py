@@ -24,7 +24,7 @@ All decisions are counted (``AdmissionStats``) for the service dashboard.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 from typing import Dict
 
 from repro.core.evaluators import workload_event_budget
@@ -34,23 +34,30 @@ ADMIT, DEFER, SHED = "admit", "defer", "shed"
 
 
 def estimate_job_events(problem: Problem, *, window: int, min_jobs: int,
-                        warmup_jobs: int, replications: int) -> int:
+                        warmup_jobs: int, replications: int,
+                        race: bool = True) -> int:
     """Upper bound on the simulator events one scheduling round of this job
     can put in flight: per class, one full window of candidates times
-    replications times the padded per-lane budget of its costliest VM-type
-    profile (any workload kind).  Event budgets depend only on task counts
-    (not on nu), so this is computable at submission time."""
+    replications times the padded per-lane budget, summed over every
+    VM-type lane the racer can have in flight at once (each profiled
+    catalog entry is one potential ``class x vm`` lane; with a single-type
+    catalog this is the pre-race estimate unchanged).  ``race=False`` jobs
+    run exactly one lane per class, so they are charged only the costliest
+    profiled lane — charging the raced footprint would needlessly defer or
+    serialize them.  Event budgets depend only on task counts (not on nu),
+    so this is computable at submission time."""
     total = 0
     for cls in problem.classes:
-        per_lane = 0
+        lanes = 0
         for vm in problem.vm_types:
             try:
                 prof = cls.profile_for(vm)
             except KeyError:
                 continue
-            per_lane = max(per_lane, workload_event_budget(
-                prof, min_jobs=min_jobs, warmup_jobs=warmup_jobs))
-        total += window * replications * per_lane
+            budget = workload_event_budget(
+                prof, min_jobs=min_jobs, warmup_jobs=warmup_jobs)
+            lanes = lanes + budget if race else max(lanes, budget)
+        total += window * replications * lanes
     return total
 
 

@@ -28,8 +28,6 @@ import itertools
 import time
 from typing import Dict, List, Optional, Union
 
-import numpy as np
-
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import Problem
@@ -68,29 +66,32 @@ class SolverService:
     def submit(self, problem: Union[Problem, str], *, min_jobs: int = 40,
                warmup_jobs: int = 8, replications: int = 2, seed: int = 0,
                samples=None, window: Optional[int] = None,
-               tag: Optional[str] = None) -> str:
+               race: bool = True, tag: Optional[str] = None) -> str:
         """Queue one problem; returns the job id immediately.  ``problem``
         may be a ``Problem`` or a JSON submission (whose ``solver`` section
-        overrides the keyword defaults)."""
+        overrides the keyword defaults).  ``race=False`` locks each class
+        to its analytic-argmin VM type instead of racing the catalog."""
         kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
                   replications=replications, seed=seed)
         if isinstance(problem, str):
             problem, overrides = parse_submission(problem)
             tag = overrides.pop("tag", tag)
             window = overrides.pop("window", window)
+            race = overrides.pop("race", race)
             unknown = set(overrides) - set(kw)
             if unknown:                   # reject cleanly at intake, not as
                 raise ValueError(         # a TypeError from SimSpec(**kw)
                     f"unknown solver option(s) {sorted(unknown)}; "
-                    f"valid: {sorted(kw)} + ['window', 'tag']")
+                    f"valid: {sorted(kw)} + ['window', 'race', 'tag']")
             kw.update(overrides)
         spec = SimSpec(**kw)
         job = Job(id=f"job-{next(self._seq):04d}", problem=problem,
                   spec=spec, window=window or self.window,
-                  samples=samples, tag=tag)
+                  race=race, samples=samples, tag=tag)
         job.events_estimate = estimate_job_events(
             problem, window=job.window, min_jobs=spec.min_jobs,
-            warmup_jobs=spec.warmup_jobs, replications=spec.replications)
+            warmup_jobs=spec.warmup_jobs, replications=spec.replications,
+            race=job.race)
         self._jobs[job.id] = job
         if self.admission.accept_submission(len(self._queue)):
             self._queue.append(job.id)
@@ -131,7 +132,8 @@ class SolverService:
         tool = DSpace4Cloud(job.problem, min_jobs=job.spec.min_jobs,
                             replications=job.spec.replications,
                             seed=job.spec.seed, samples=job.samples,
-                            batched=True, window=job.window)
+                            batched=True, window=job.window,
+                            race=job.race)
         job._gen = tool.run_steps()
         try:
             job._pending = next(job._gen)
@@ -166,7 +168,7 @@ class SolverService:
 
         for jid in list(self._active):
             job = self._jobs[jid]
-            results = {r.cls.name: r.result for r in requests[jid]}
+            results = {r.rid: r.result for r in requests[jid]}
             try:
                 job._pending = job._gen.send(results)
             except StopIteration as stop:

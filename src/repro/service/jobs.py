@@ -38,6 +38,8 @@ class Job:
     problem: Problem
     spec: SimSpec
     window: int = 16
+    race: bool = True     # race VM-type lanes at the QN tier (single-type
+    #                       catalogs degenerate to the locked walk anyway)
     # {(class_name, vm_name): replay payload} — (m_list, r_list) for
     # MapReduce classes, a (n_stages, n_samples) array for DAG classes
     samples: Optional[Dict[Tuple[str, str], object]] = None
@@ -76,7 +78,7 @@ def parse_submission(text: str) -> Tuple[Problem, dict]:
     """Decode one JSON submission: ``{"problem": {...}, "solver": {...}}``
     (or a bare problem document).  Returns the problem and the solver
     keyword overrides (min_jobs, warmup_jobs, replications, seed, window,
-    tag)."""
+    race, tag)."""
     raw = json.loads(text)
     if "problem" in raw:
         solver = dict(raw.get("solver") or {})

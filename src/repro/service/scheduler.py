@@ -24,12 +24,13 @@ changes dispatch *timing*, never values.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.evaluators import fused_eval_call
+from repro.core.hillclimb import request_id
 from repro.core.problem import ApplicationClass, VMType
 from repro.core.workload import DAG, workload_kind
 from repro.service.cache import CacheKey, EvalCache, profile_hash, \
@@ -49,7 +50,10 @@ class SimSpec:
 
 @dataclass
 class WindowRequest:
-    """One job's pending window, annotated with its simulation context."""
+    """One job's pending window, annotated with its simulation context.
+    Identified by ``rid`` — the (class x VM type) lane of the resumable
+    protocol, since a racing job can have several windows of one class in
+    flight per round (one per surviving VM-type lane)."""
     job_id: str
     cls: ApplicationClass
     vm: VMType
@@ -59,6 +63,10 @@ class WindowRequest:
     #                                      native form — (m_list, r_list)
     #                                      or a (K, NS) array — or None
     result: Optional[np.ndarray] = None  # filled by flush(), aligned to nus
+
+    @property
+    def rid(self) -> str:
+        return request_id(self.cls.name, self.vm.name)
 
 
 @dataclass

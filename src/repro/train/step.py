@@ -3,7 +3,6 @@ accumulation (``lax.scan``) so compute of microbatch k+1 overlaps the
 reduction of microbatch k under XLA's latency-hiding scheduler on TPU."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -14,7 +14,7 @@ from repro.ckpt.checkpointer import Checkpointer
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import pipeline_for_model
 from repro.distributed.compression import ef_int8_transform, init_error_state
-from repro.distributed.fault import PreemptionHandler, StragglerDetector
+from repro.distributed.fault import PreemptionHandler
 from repro.distributed.sharding import init_params
 from repro.models import api
 from repro.optim.adamw import AdamWConfig

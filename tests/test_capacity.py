@@ -1,5 +1,4 @@
 """TPU capacity planner on synthetic dry-run costs (no file dependency)."""
-import math
 
 import pytest
 

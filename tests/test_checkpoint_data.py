@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, SyntheticPipeline

@@ -1,6 +1,5 @@
 """Detailed trace-replay cluster simulator (the 'measured system')."""
 import numpy as np
-import pytest
 
 from repro.core.cluster_sim import (
     WorkloadSpec,

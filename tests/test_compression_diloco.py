@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_smoke_config
 from repro.distributed.compression import (
@@ -14,8 +13,6 @@ from repro.distributed.diloco import (
     DiLoCoConfig,
     init_outer_state,
     make_diloco_round,
-    outer_update,
-    replicate_for_pods,
 )
 from repro.data.pipeline import pipeline_for_model
 from repro.distributed.sharding import init_params

@@ -1,10 +1,9 @@
 """Fault tolerance: restart-resume bitwise parity, preemption, stragglers,
 elastic re-planning."""
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_smoke_config
-from repro.distributed.fault import ElasticPlan, PreemptionHandler, StragglerDetector
+from repro.distributed.fault import ElasticPlan, StragglerDetector
 from repro.optim.adamw import AdamWConfig
 from repro.train.trainer import Trainer, TrainerConfig
 

@@ -1,5 +1,4 @@
 """Algorithm 1: convergence to the evaluator's optimum, both branches."""
-import pytest
 
 from repro.core.hillclimb import hill_climb, optimize_class
 from repro.core.milp import initial_solution

@@ -1,7 +1,6 @@
 """Trip-count-aware HLO parser vs programs with known costs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_costs import parse_hlo_costs

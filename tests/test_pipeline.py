@@ -1,6 +1,5 @@
 """Pipeline parallelism: numerical equivalence with sequential execution,
 gradient flow, and the multi-device sharded path (subprocess)."""
-import json
 import os
 import subprocess
 import sys

@@ -1,7 +1,6 @@
 """Reserved/spot mix optimality (P1h/P1i) — unit tests + edge cases run
 always; the hypothesis property tests skip cleanly when the package is
 absent (it is optional, see requirements-dev.txt)."""
-import math
 
 import pytest
 

@@ -1,6 +1,5 @@
 """System-level invariants under hypothesis — the paper's qualitative laws
 plus conservation properties of the simulators."""
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

@@ -62,7 +62,7 @@ def test_run_steps_returns_report_equal_to_run():
     gen = tool.run_steps()
     reqs = next(gen)
     while True:
-        results = {r.cls.name: tool.evaluate.evaluate_frontier(
+        results = {r.rid: tool.evaluate.evaluate_frontier(
             r.cls, r.vm, r.nus) for r in reqs}
         try:
             reqs = gen.send(results)

@@ -2,13 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_smoke_config
 from repro.distributed.sharding import init_params
 from repro.models import api
 from repro.serve.engine import BatchingEngine
-from repro.serve.step import make_prefill_step
 
 CFG = get_smoke_config("granite-3-2b")
 PARAMS = init_params(api.param_specs(CFG), jax.random.key(0))

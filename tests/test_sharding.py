@@ -1,9 +1,6 @@
 """Logical-axis sharding rules + abstract param specs."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.distributed.sharding import (

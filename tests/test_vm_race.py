@@ -1,0 +1,374 @@
+"""Catalog-wide configuration racing (joint (VM type, nu) search).
+
+The analytic tier proposes a full per-class candidate ranking
+(``milp.rank_vm_types``); the QN tier races one sweep lane per candidate
+(``hillclimb.race_requests``) with cost-lower-bound pruning, so an
+analytic misranking of VM types is corrected by the accurate simulator
+instead of being frozen in.  Pinned here:
+
+  * the ranking's head IS ``initial_solution`` (paper-faithful argmin);
+  * single-lane degeneracy: racing a one-entry catalog reproduces the
+    solo sweep move-for-move;
+  * misranked catalogs: the racer returns a strictly cheaper verified
+    deployment than the analytic-locked walk, at fused-dispatch parity,
+    with every probed point bit-exact versus that lane's solo sweep;
+  * lower-bound pruning retires hopeless lanes without further
+    dispatches, and (hypothesis) never discards a lane whose bound beats
+    the incumbent — the winner is never a pruned lane;
+  * ``amva_nu_seed`` recovers the frontier from a pessimistic
+    (overshooting) analytic seed, where the old asymmetric window missed
+    it (regression), and ``run_fast`` is seed-robust end to end.
+
+The real-QN scenario runs tiny simulations (min_jobs=8, 1 replication)
+so the whole module stays in tier-1 time budgets; the pruning and
+degeneracy mechanics use deterministic analytic stubs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import qn_sim
+from repro.core.evaluators import amva_frontier, amva_nu_seed
+from repro.core.hillclimb import (
+    race_class,
+    race_requests,
+    request_id,
+    sweep_class,
+)
+from repro.core.milp import initial_solution, rank_vm_types
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
+from repro.service import SolverService
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# Misranked catalog: "turbo" is cheaper per VM and behaves identically at
+# the QN tier (same task averages, same slot count), but its profiling run
+# recorded pessimistic task *maxima* — the analytic B-term (half the maxima
+# sum) inflates only the analytic estimate, so the analytic tier needs more
+# turbo VMs and misranks it behind "steady".  Exactly the configuration-
+# space blindness the racer exists to fix.
+STEADY = VMType(name="steady", cores=2, sigma=0.05, pi=0.20)
+TURBO = VMType(name="turbo", cores=2, sigma=0.0425, pi=0.17)
+_BASE = dict(n_map=24, n_reduce=6, m_avg=2000, r_avg=900)
+PROF_STEADY = JobProfile(m_max=4000, r_max=1800, **_BASE)
+PROF_TURBO = JobProfile(m_max=6000, r_max=2700, **_BASE)
+KW = dict(min_jobs=8, replications=1, seed=3, window=8)
+
+
+def misranked_problem(extra_vms=(), extra_profiles=None) -> Problem:
+    profiles = {"steady": PROF_STEADY, "turbo": PROF_TURBO}
+    profiles.update(extra_profiles or {})
+    cls = ApplicationClass(name="etl", h_users=4, think_ms=6000.0,
+                           deadline_ms=11_000.0, eta=0.25,
+                           profiles=profiles)
+    return Problem(classes=[cls],
+                   vm_types=[STEADY, TURBO, *extra_vms])
+
+
+# ------------------------------------------------------------ analytic tier
+
+def test_rank_vm_types_head_is_initial_solution():
+    prob = misranked_problem()
+    ranking = rank_vm_types(prob)["etl"]
+    init = initial_solution(prob)["etl"]
+    assert ranking[0] == init
+    assert [s.vm_type for s in ranking] == ["steady", "turbo"]  # misranked
+    costs = [s.cost_per_h for s in ranking]
+    assert costs == sorted(costs)
+
+
+def test_rank_vm_types_raises_when_nothing_feasible():
+    prof = JobProfile(n_map=4, n_reduce=1, m_avg=1e9, m_max=2e9,
+                      r_avg=1e9, r_max=2e9)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=1000.0,
+                           deadline_ms=10.0, profiles={"steady": prof})
+    with pytest.raises(ValueError, match="no feasible"):
+        rank_vm_types(Problem(classes=[cls], vm_types=[STEADY]))
+
+
+# ------------------------------------------------------ race mechanics
+
+def _analytic_stub(boundary_by_vm):
+    """Deterministic evaluator: T = D * nu*(vm) / nu — monotone decreasing,
+    feasible exactly from the per-VM boundary upward."""
+    def evaluate(cls, vm, nu):
+        return cls.deadline_ms * boundary_by_vm[vm.name] / nu
+    return evaluate
+
+
+def test_single_lane_race_degenerates_to_solo_sweep():
+    cls = ApplicationClass(name="c", h_users=4, think_ms=10_000,
+                           deadline_ms=30_000, eta=0.25, profiles={})
+    ev = _analytic_stub({"steady": 8})
+    for nu0 in (2, 8, 30):
+        traces = {}
+        raced = race_class(cls, [(STEADY, nu0)], ev, window=8,
+                           traces=traces)
+        from repro.core.hillclimb import HCTrace
+        solo_tr = HCTrace(cls="c")
+
+        class Frontier:  # wrap the scalar stub for sweep_class
+            def evaluate_frontier(self, cls, vm, nus):
+                return np.array([ev(cls, vm, n) for n in nus])
+
+        solo = sweep_class(cls, STEADY, nu0, Frontier(), window=8,
+                           trace=solo_tr)
+        assert raced == solo
+        rid = request_id("c", "steady")
+        assert traces[rid].moves == solo_tr.moves     # same probed points
+        assert not traces[rid].pruned
+
+
+def test_race_returns_cheapest_verified_lane():
+    # QN tier says vm1 needs 20 VMs, vm2 only 6: analytic ranking (by nu0)
+    # puts vm1 first, the race must still return vm2
+    vm1 = VMType(name="vm1", cores=1, sigma=0.10, pi=0.10)
+    vm2 = VMType(name="vm2", cores=1, sigma=0.12, pi=0.12)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=5000,
+                           deadline_ms=10_000, eta=0.0, profiles={})
+    ev = _analytic_stub({"vm1": 20, "vm2": 6})
+    sol = race_class(cls, [(vm1, 4), (vm2, 7)], ev, window=8)
+    assert sol.vm_type == "vm2" and sol.nu == 6 and sol.feasible
+    assert sol.cost_per_h == pytest.approx(0.12 * 6)
+
+
+def test_race_all_lanes_infeasible_returns_rank0_verdict():
+    vm1 = VMType(name="vm1", cores=1, sigma=0.10, pi=0.10)
+    vm2 = VMType(name="vm2", cores=1, sigma=0.12, pi=0.12)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=5000,
+                           deadline_ms=10_000, eta=0.0, profiles={})
+    ev = _analytic_stub({"vm1": 10**7, "vm2": 10**7})   # beyond max_nu
+    sol = race_class(cls, [(vm1, 4), (vm2, 7)], ev, window=8, max_nu=64)
+    assert not sol.feasible
+    assert sol.vm_type == "vm1"                          # rank-0's verdict
+
+
+def test_pruned_lane_stops_proposing_windows():
+    # the cheap lane verifies in round 2; the rich lane's bound
+    # (0.5 * 40 = 20) is far above the incumbent (0.1 * 10 = 1.0), so from
+    # round 3 on it must propose nothing more even though its own sweep
+    # (boundary 100, many windows away) has not converged
+    cheap = VMType(name="cheap", cores=1, sigma=0.1, pi=0.1)
+    rich = VMType(name="rich", cores=1, sigma=0.5, pi=0.5)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=5000,
+                           deadline_ms=10_000, eta=0.0, profiles={})
+    ev = _analytic_stub({"cheap": 10, "rich": 100})
+    traces = {}
+    gen = race_requests(cls, [(cheap, 6), (rich, 40)], window=4,
+                        traces=traces)
+    rich_windows = 0
+    results = None
+    while True:
+        try:
+            props = gen.send(results) if results is not None else next(gen)
+        except StopIteration as stop:
+            sol = stop.value
+            break
+        rich_windows += sum(1 for vm, _ in props if vm.name == "rich")
+        results = {vm.name: [ev(cls, vm, n) for n in nus]
+                   for vm, nus in props}
+    assert sol.vm_type == "cheap" and sol.nu == 10
+    assert traces[request_id("c", "rich")].pruned
+    assert rich_windows == 2          # only the pre-incumbent rounds
+
+    # an un-raced rich sweep would have kept dispatching many more windows
+    class Frontier:
+        def evaluate_frontier(self, cls, vm, nus):
+            return np.array([ev(cls, vm, n) for n in nus])
+
+    from repro.core.hillclimb import HCTrace
+    solo_tr = HCTrace(cls="c")
+    sweep_class(cls, rich, 40, Frontier(), window=4, trace=solo_tr)
+    assert solo_tr.evals > traces[request_id("c", "rich")].evals
+
+
+# --------------------------------------------------- real QN, end to end
+
+def test_misranked_catalog_racer_beats_locked_choice():
+    prob = misranked_problem()
+    locked = DSpace4Cloud(prob, race=False, **KW).run()
+    d0 = qn_sim.dispatch_count()
+    raced = DSpace4Cloud(prob, race=True, **KW).run()
+    d_raced = qn_sim.dispatch_count() - d0
+
+    assert locked.solutions["etl"].vm_type == "steady"   # analytic argmin
+    assert raced.solutions["etl"].vm_type == "turbo"     # QN-verified win
+    assert raced.solutions["etl"].feasible
+    assert raced.solutions["etl"].cost_per_h < \
+        locked.solutions["etl"].cost_per_h
+    # both lanes fused: the race pays no more dispatches than the lock-in
+    assert d_raced <= 2 * max(locked.qn_dispatches, 1)
+
+
+def test_raced_lane_points_bit_exact_vs_solo_sweep():
+    prob = misranked_problem()
+    raced = DSpace4Cloud(prob, race=True, **KW).run()
+    ranking = {s.vm_type: s for s in rank_vm_types(prob)["etl"]}
+    cls = prob.classes[0]
+    for vm in prob.vm_types:
+        from repro.core.hillclimb import HCTrace
+        tr = HCTrace(cls="etl")
+        solo_kw = {k: KW[k] for k in ("min_jobs", "replications", "seed")}
+        ev = DSpace4Cloud(Problem(classes=[cls], vm_types=[vm]),
+                          window=KW["window"], **solo_kw).evaluate
+        sweep_class(cls, vm, ranking[vm.name].nu, ev,
+                    window=KW["window"], trace=tr)
+        assert raced.traces[request_id("etl", vm.name)].moves == tr.moves
+
+
+def test_single_type_catalog_race_reproduces_locked_run():
+    cls = ApplicationClass(name="etl", h_users=4, think_ms=6000.0,
+                           deadline_ms=11_000.0, eta=0.25,
+                           profiles={"steady": PROF_STEADY})
+    prob = Problem(classes=[cls], vm_types=[STEADY])
+    d0 = qn_sim.dispatch_count()
+    raced = DSpace4Cloud(prob, race=True, **KW).run()
+    d_raced = qn_sim.dispatch_count() - d0
+    d0 = qn_sim.dispatch_count()
+    locked = DSpace4Cloud(prob, race=False, **KW).run()
+    d_locked = qn_sim.dispatch_count() - d0
+    assert raced.solutions == locked.solutions
+    assert d_raced == d_locked
+    rid = request_id("etl", "steady")
+    assert raced.traces[rid].moves == locked.traces[rid].moves
+
+
+def test_run_steps_keys_pending_lanes_by_request_id():
+    prob = misranked_problem()
+    tool = DSpace4Cloud(prob, race=True, **KW)
+    gen = tool.run_steps()
+    reqs = next(gen)
+    assert sorted(r.rid for r in reqs) == \
+        [request_id("etl", "steady"), request_id("etl", "turbo")]
+    while True:
+        results = {r.rid: tool.evaluate.evaluate_frontier(
+            r.cls, r.vm, r.nus) for r in reqs}
+        try:
+            reqs = gen.send(results)
+        except StopIteration as stop:
+            rep = stop.value
+            break
+    solo = DSpace4Cloud(prob, race=True, **KW).run()
+    assert rep.solutions == solo.solutions
+    assert rep.evals == solo.evals
+
+
+def test_service_races_catalogs_and_matches_solo():
+    prob = misranked_problem()
+    solo = DSpace4Cloud(prob, race=True, **KW).run()
+    solo_kw = {k: KW[k] for k in ("min_jobs", "replications", "seed")}
+    svc = SolverService(window=KW["window"])
+    jid = svc.submit(prob, **solo_kw)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].report.solutions == solo.solutions
+    for rid in solo.traces:
+        assert jobs[jid].report.traces[rid].moves == solo.traces[rid].moves
+    assert jobs[jid].report.solutions["etl"].vm_type == "turbo"
+
+
+def test_admission_charges_one_lane_per_catalog_entry_only_when_racing():
+    from repro.service import estimate_job_events
+    prob = misranked_problem()
+    kw = dict(window=8, min_jobs=8, warmup_jobs=8, replications=1)
+    raced = estimate_job_events(prob, race=True, **kw)
+    locked = estimate_job_events(prob, race=False, **kw)
+    # both profiled lanes share task counts, so racing doubles the
+    # footprint while a locked job is charged its single lane only
+    assert raced == 2 * locked
+    assert locked > 0
+
+
+def test_run_fast_races_and_agrees_with_run():
+    prob = misranked_problem()
+    fast = DSpace4Cloud(prob, race=True, **KW).run_fast()
+    classic = DSpace4Cloud(prob, race=True, **KW).run()
+    assert fast.solutions["etl"].vm_type == \
+        classic.solutions["etl"].vm_type == "turbo"
+    assert abs(fast.solutions["etl"].nu - classic.solutions["etl"].nu) <= 2
+
+
+# ------------------------------------------- frontier window (satellite)
+
+def test_amva_nu_seed_recovers_from_pessimistic_seed():
+    cls = misranked_problem().classes[0]
+    ts = amva_frontier(cls, STEADY, 1, 64)
+    true_min = 1 + int(np.where(ts <= cls.deadline_ms)[0][0])
+    span = 8
+    seed = true_min + 37                     # pessimistic analytic proposal
+    assert true_min < seed - span // 2       # old window [seed-4, seed+8]
+    #                                          could not contain the min
+    assert amva_nu_seed(cls, STEADY, seed, span) == true_min
+    # a well-centred proposal is untouched (old behaviour preserved)
+    assert amva_nu_seed(cls, STEADY, true_min, span) == true_min
+
+
+def test_run_fast_is_robust_to_pessimistic_analytic_seeds(monkeypatch):
+    from dataclasses import replace
+    import repro.core.optimizer as opt
+    prob = misranked_problem()
+    baseline = DSpace4Cloud(prob, race=True, **KW).run_fast()
+
+    real_rank = rank_vm_types
+
+    def inflated(problem, max_vms=4096):
+        return {name: [replace(c, nu=c.nu + 40) for c in cands]
+                for name, cands in real_rank(problem, max_vms).items()}
+
+    monkeypatch.setattr(opt, "rank_vm_types", inflated)
+    inflated_rep = DSpace4Cloud(prob, race=True, **KW).run_fast()
+    # amva_nu_seed walks the window back down, so the race starts from the
+    # same seeds and lands on the identical deployment
+    assert inflated_rep.solutions == baseline.solutions
+
+
+# ----------------------------------------------- pruning soundness (PBT)
+
+if HAVE_HYPOTHESIS:
+    lane_strategy = st.lists(
+        st.tuples(
+            st.floats(min_value=0.05, max_value=2.0),   # price per VM
+            st.integers(min_value=1, max_value=40),     # analytic nu0
+            st.integers(min_value=1, max_value=60),     # QN boundary nu*
+        ),
+        min_size=1, max_size=5)
+
+    @given(lanes=lane_strategy)
+    @settings(max_examples=80, deadline=None)
+    def test_pruning_never_discards_lane_whose_bound_beats_incumbent(lanes):
+        # eta=0 and sigma==pi => cost is exactly price*nu, so each lane's
+        # lower bound is price*nu0 and its verified cost price*boundary
+        vms = [VMType(name=f"vm{i}", cores=1, sigma=p, pi=p)
+               for i, (p, _, _) in enumerate(lanes)]
+        cls = ApplicationClass(name="c", h_users=2, think_ms=1000.0,
+                               deadline_ms=10_000.0, eta=0.0, profiles={})
+        boundary = {f"vm{i}": b for i, (_, _, b) in enumerate(lanes)}
+        ranked = sorted(
+            ((vms[i], nu0, p * nu0)
+             for i, (p, nu0, _) in enumerate(lanes)),
+            key=lambda t: t[2])
+        traces = {}
+        sol = race_class(cls, [(vm, nu0) for vm, nu0, _ in ranked],
+                         _analytic_stub(boundary), window=8, traces=traces)
+
+        assert sol.feasible
+        # the winner is never a pruned lane
+        assert not traces[request_id("c", sol.vm_type)].pruned
+        verified = {v.name: v.pi * boundary[v.name] for v in vms}
+        for vm in vms:
+            tr = traces[request_id("c", vm.name)]
+            if tr.pruned:
+                # only lanes whose bound strictly exceeds the final
+                # incumbent cost may ever be discarded
+                assert tr.lane_bound > sol.cost_per_h
+            else:
+                # every surviving lane was verified; none beats the winner
+                assert sol.cost_per_h <= verified[vm.name] + 1e-9
+        # the racer returns the cheapest surviving verified lane
+        best_surviving = min(
+            verified[vm.name] for vm in vms
+            if not traces[request_id("c", vm.name)].pruned)
+        assert sol.cost_per_h == pytest.approx(best_surviving)

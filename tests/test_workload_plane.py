@@ -27,6 +27,7 @@ from repro.core.evaluators import (
     make_qn_evaluator,
     workload_event_budget,
 )
+from repro.core.hillclimb import request_id
 from repro.core.milp import initial_solution
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
@@ -140,7 +141,7 @@ def test_mixed_problem_solves_batched_with_scalar_parity():
     assert all(s.feasible for s in rep.solutions.values())
 
     cls = prob.classes[1]
-    for nu, t, _feas in rep.traces["spark-etl"].moves:
+    for nu, t, _feas in rep.traces[request_id("spark-etl", VM.name)].moves:
         t_scalar = dag_response_time(
             SPARK, slots=nu * VM.slots, think_ms=cls.think_ms,
             h_users=cls.h_users, min_jobs=KW["min_jobs"], warmup_jobs=8,
@@ -225,7 +226,8 @@ def test_service_replay_groups_split_by_stage_count():
     for k, jid in jids.items():
         assert jobs[jid].state in (JobState.DONE, JobState.INFEASIBLE)
         cls = probs[k].classes[0]
-        nu, t, _ = jobs[jid].report.traces[cls.name].moves[0]
+        nu, t, _ = jobs[jid].report.traces[
+            request_id(cls.name, VM.name)].moves[0]
         t_scalar = dag_response_time(
             cls.profiles[VM.name], slots=nu * VM.slots,
             think_ms=cls.think_ms, h_users=cls.h_users,
