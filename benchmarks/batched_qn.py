@@ -21,7 +21,7 @@ import numpy as np
 from benchmarks.common import emit, save_json, timer
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
-from repro.core.workloads import scenario_problem
+from repro.core.tpcds import scenario_problem
 
 
 def _frontier_throughput(prob, samples, quick: bool):

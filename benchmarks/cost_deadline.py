@@ -19,7 +19,7 @@ from benchmarks.common import emit, save_json, timer
 from repro.core.evaluators import amva_frontier, make_qn_evaluator
 from repro.core.hillclimb import optimize_class
 from repro.core.milp import initial_class_solution
-from repro.core.workloads import scenario_problem
+from repro.core.tpcds import scenario_problem
 
 
 def sweep(query: str, users: int, deadlines_s: List[float],

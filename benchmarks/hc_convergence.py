@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit, save_json, timer
 from repro.core.optimizer import DSpace4Cloud
-from repro.core.workloads import scenario_problem
+from repro.core.tpcds import scenario_problem
 
 
 def run(quick: bool = False):

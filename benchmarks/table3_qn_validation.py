@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import emit, save_json, timer
 from repro.core import qn_sim
 from repro.core.cluster_sim import replayer_lists, simulate_cluster
-from repro.core.workloads import TABLE3, THINK_MS, calibrated_specs
+from repro.core.tpcds import TABLE3, THINK_MS, calibrated_specs
 
 
 def run(quick: bool = False):

@@ -28,6 +28,16 @@ MapReduce path is unchanged bit-for-bit; DAG windows get the same
 one-dispatch-per-window economics (benchmarks/dag_sweep.py), and DAG
 classes race across VM types exactly like MapReduce classes (the
 evaluator owns the kind dispatch).
+
+Deployment-generic: passing a ``PrivateCloud`` (``deployment=`` keyword,
+or the problem's own ``deployment`` field) turns every gait into a
+private-cloud planner: after the unconstrained race, the fleet is
+bin-packed onto the physical hosts and — if it over-commits them — the
+dual-price coordinator (``repro.cloud.joint``) re-races classes under a
+shared price on cores until the packed plan is feasible, with every
+coordination probe flowing through the same fused QN plane
+(``docs/private_cloud.md``).  ``deployment=None`` is the paper's public
+cloud: unbounded capacity, bit-identical to the pre-private-cloud tool.
 """
 from __future__ import annotations
 
@@ -38,6 +48,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.cloud import joint as joint_mod
+from repro.cloud.hosts import PrivateCloud
 from repro.core import qn_sim
 from repro.core.evaluators import (
     amva_nu_seed,
@@ -75,6 +87,7 @@ class RunReport:
     traces: Dict[str, HCTrace] = field(default_factory=dict)
     initial: Optional[Dict[str, ClassSolution]] = None
     qn_dispatches: int = 0        # simulator device dispatches this run
+    deployment: Optional[dict] = None  # JointPlan.summary() (private cloud)
 
     def to_json(self) -> str:
         return json.dumps({
@@ -85,6 +98,7 @@ class RunReport:
             "classes": {k: v.as_dict() for k, v in self.solutions.items()},
             "initial": ({k: v.as_dict() for k, v in self.initial.items()}
                         if self.initial else None),
+            "deployment": self.deployment,
         }, indent=1)
 
 
@@ -116,21 +130,45 @@ class DSpace4Cloud:
     def __init__(self, problem: Problem, *, min_jobs: int = 40,
                  replications: int = 2, seed: int = 0, samples=None,
                  batched: bool = True, window: int = 16,
-                 race: bool = True):
+                 race: bool = True,
+                 deployment: Optional[PrivateCloud] = None,
+                 cache: Optional[dict] = None):
         self.problem = problem
         self.window = window
         self.batched = batched
         self.race = race
-        self._qn_cache: dict = {}
+        # the deployment target: an explicit keyword wins, else whatever
+        # the problem document carries; None = public cloud (unbounded)
+        self.deployment = deployment if deployment is not None \
+            else getattr(problem, "deployment", None)
+        self._qn_cache: dict = cache if cache is not None else {}
+        self._rank_cache: Optional[Dict[str, List[ClassSolution]]] = None
         maker = make_batched_qn_evaluator if batched else make_qn_evaluator
         self.evaluate = maker(
             min_jobs=min_jobs, replications=replications, seed=seed,
             cache=self._qn_cache, samples=samples)
 
+    def _full_ranking(self) -> Dict[str, List[ClassSolution]]:
+        """``milp.rank_vm_types`` memoized per instance — both the race
+        and the private-cloud coordinator read it."""
+        if self._rank_cache is None:
+            self._rank_cache = rank_vm_types(self.problem)
+        return self._rank_cache
+
+    def _coordination_lanes(self) -> Dict[str, List]:
+        """Per-class ``(vm, nu0)`` candidate lanes the dual-price
+        coordinator may steer within — always the FULL analytic ranking,
+        even under ``race=False``: a capacity-coupled plan must be free
+        to shift classes across VM types, or pricing cores could never
+        change anything."""
+        return {name: [(self.problem.vm_by_name(c.vm_type), c.nu)
+                       for c in cands]
+                for name, cands in self._full_ranking().items()}
+
     def _ranking(self) -> Dict[str, List[ClassSolution]]:
         """Per-class analytic candidate ranking; truncated to the argmin
         when racing is off (single lane == pre-race behaviour)."""
-        ranking = rank_vm_types(self.problem)
+        ranking = self._full_ranking()
         if not self.race:
             ranking = {name: cands[:1] for name, cands in ranking.items()}
         return ranking
@@ -188,7 +226,30 @@ class DSpace4Cloud:
                 except StopIteration as stop:
                     sols[name] = stop.value
             proposed = nxt
-        return _report(sols, traces, init, t0, d0)
+        if self.deployment is None:
+            return _report(sols, traces, init, t0, d0)
+
+        # ---- private cloud: pack the raced fleet; coordinate if it
+        # over-commits.  The coordinator speaks the same propose/receive
+        # protocol, so its probe rounds keep flowing through whoever
+        # drives this generator (run()'s evaluate_many, or the service's
+        # FusionScheduler — fused across tenants either way).
+        coord = joint_mod.coordinate_requests(
+            self.problem, self.deployment, sols,
+            self._coordination_lanes(), window=self.window, traces=traces)
+        results = None
+        while True:
+            try:
+                props = coord.send(results) if results is not None \
+                    else next(coord)
+            except StopIteration as stop:
+                plan = stop.value
+                break
+            results = yield [EvalRequest(cls=cls, vm=vm, nus=list(nus))
+                             for cls, vm, nus in props]
+        report = _report(plan.solutions, traces, init, t0, d0)
+        report.deployment = plan.summary()
+        return report
 
     # ------------------------------------------------------------- classic
     def run(self, parallel: bool = True) -> RunReport:
@@ -212,7 +273,17 @@ class DSpace4Cloud:
                                          window=self.window)
             traces = {request_id(name, init[name].vm_type): tr
                       for name, tr in hc_traces.items()}
-            return _report(sols, traces, init, t0, d0)
+            plan = None
+            if self.deployment is not None:
+                plan = joint_mod.coordinate(
+                    self.problem, self.deployment, sols,
+                    self._coordination_lanes(), self.evaluate,
+                    window=self.window, traces=traces)
+                sols = plan.solutions
+            report = _report(sols, traces, init, t0, d0)
+            if plan is not None:
+                report.deployment = plan.summary()
+            return report
 
         gen = self.run_steps()
         results = None
@@ -246,15 +317,34 @@ class DSpace4Cloud:
         init = {name: cands[0] for name, cands in ranking.items()}
         sols: Dict[str, ClassSolution] = {}
         traces: Dict[str, HCTrace] = {}
+        lanes_by_class: Dict[str, List] = {}
         for cls in self.problem.classes:
             lanes = []
             for cand in ranking[cls.name]:
                 vm = self.problem.vm_by_name(cand.vm_type)
                 lanes.append((vm, amva_nu_seed(cls, vm, cand.nu,
                                                frontier_span)))
+            lanes_by_class[cls.name] = lanes
             sols[cls.name] = race_class(cls, lanes, self.evaluate,
                                         window=self.window, traces=traces)
-        return _report(sols, traces, init, t0, d0)
+        plan = None
+        if self.deployment is not None:
+            # coordination lanes keep the AMVA-frontier seeds where the
+            # race already computed them (race=True covers the full
+            # ranking; under race=False the analytic ranking fills in)
+            lanes = self._coordination_lanes()
+            for name, raced in lanes_by_class.items():
+                seeded = {vm.name: nu for vm, nu in raced}
+                lanes[name] = [(vm, seeded.get(vm.name, nu))
+                               for vm, nu in lanes[name]]
+            plan = joint_mod.coordinate(
+                self.problem, self.deployment, sols, lanes, self.evaluate,
+                window=self.window, traces=traces)
+            sols = plan.solutions
+        report = _report(sols, traces, init, t0, d0)
+        if plan is not None:
+            report.deployment = plan.summary()
+        return report
 
     # ------------------------------------------------------------ file API
     @staticmethod

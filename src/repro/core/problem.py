@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import asdict, dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.workload import (
     MAPREDUCE,
@@ -117,8 +117,16 @@ class ClassSolution:
 
 @dataclass
 class Problem:
+    """One planning instance.  ``deployment`` is the optional private
+    deployment target (a ``repro.cloud.hosts.PrivateCloud``): ``None``
+    means the paper's public-cloud scenario — capacity unbounded, classes
+    planned independently.  With a deployment attached, every optimizer
+    gait packs the chosen fleet onto the physical hosts and coordinates
+    classes under a shared core price when they over-commit it
+    (``repro.cloud.joint``, docs/private_cloud.md)."""
     classes: List[ApplicationClass]
     vm_types: List[VMType]
+    deployment: Optional[object] = None      # PrivateCloud | None
 
     def vm_by_name(self, name: str) -> VMType:
         for v in self.vm_types:
@@ -136,7 +144,12 @@ class Problem:
             profs = {k: workload_from_dict(p)
                      for k, p in c.pop("profiles").items()}
             classes.append(ApplicationClass(profiles=profs, **c))
-        return Problem(classes=classes, vm_types=vms)
+        deployment = None
+        if raw.get("deployment") is not None:
+            # lazy: the cloud package depends on this module
+            from repro.cloud.hosts import deployment_from_dict
+            deployment = deployment_from_dict(raw["deployment"])
+        return Problem(classes=classes, vm_types=vms, deployment=deployment)
 
     def to_json(self) -> str:
         return json.dumps({
@@ -147,6 +160,8 @@ class Problem:
                 for c in self.classes
             ],
             "vm_types": [asdict(v) for v in self.vm_types],
+            "deployment": (self.deployment.to_dict()
+                           if self.deployment is not None else None),
         }, indent=1)
 
 

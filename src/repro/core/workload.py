@@ -26,8 +26,8 @@ abstraction).  ``docs/workloads.md`` walks through adding a third kind.
 
 This module is deliberately dependency-free (hashlib/numpy only) so the
 problem layer, the analytic tier, and the service cache can all import it
-without cycles.  (Not to be confused with ``repro.core.workloads`` — the
-TPC-DS scenario catalog of the paper's §4 experiments.)
+without cycles.  (The TPC-DS scenario catalog of the paper's §4
+experiments lives in ``repro.core.tpcds``.)
 """
 from __future__ import annotations
 

@@ -97,7 +97,6 @@ def _fwd(q, k, v, causal, window, block_q, block_k):
         acc0 = jnp.zeros((B, H, block_q, Dh), jnp.float32)
         m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, H, block_q), jnp.float32)
-        n_visit = span if window else (qi * 0 + span)  # static count
         (acc, m, l), _ = lax.scan(kv_step, (acc0, m0, l0), jnp.arange(span))
         l_safe = jnp.maximum(l, 1e-37)
         out = (acc / l_safe[..., None]).astype(q.dtype)

@@ -123,13 +123,11 @@ def attention_chunked(
     are visited per q-block (structural O(S·w) compute).
     """
     B, S, H, Dh = q.shape
-    n_kv = k.shape[-2]
     block_q = min(block_q, S)
     block_k = min(block_k, S)
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     nq, nk = S // block_q, S // block_k
     scale = 1.0 / math.sqrt(Dh)
-    group = H // n_kv
 
     if window:
         k_span = min(nk, int(math.ceil(window / block_k)) + 1)

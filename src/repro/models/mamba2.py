@@ -83,7 +83,6 @@ def causal_conv_step(
     u_new: jax.Array, conv_state: jax.Array, w: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
     """One decode step.  u_new: (B,Ch); conv_state: (B,K-1,Ch)."""
-    K = w.shape[0]
     hist = jnp.concatenate([conv_state, u_new[:, None]], axis=1)  # (B,K,Ch)
     out = jnp.einsum("bkc,kc->bc", hist, w)
     return out, hist[:, 1:]

@@ -4,14 +4,15 @@ Many tenants' ``Problem`` instances solved concurrently with cross-job
 fused QN scheduling, a shared persistent evaluation cache, and admission
 control — see docs/service.md.
 """
-from repro.service.admission import AdmissionController, estimate_job_events
+from repro.service.admission import AdmissionController, \
+    estimate_job_cores, estimate_job_events
 from repro.service.cache import EvalCache, profile_hash
 from repro.service.engine import SolverService
 from repro.service.jobs import Job, JobState, parse_submission
 from repro.service.scheduler import FusionScheduler, SimSpec, WindowRequest
 
 __all__ = [
-    "AdmissionController", "estimate_job_events", "EvalCache",
-    "profile_hash", "SolverService", "Job", "JobState", "parse_submission",
-    "FusionScheduler", "SimSpec", "WindowRequest",
+    "AdmissionController", "estimate_job_cores", "estimate_job_events",
+    "EvalCache", "profile_hash", "SolverService", "Job", "JobState",
+    "parse_submission", "FusionScheduler", "SimSpec", "WindowRequest",
 ]

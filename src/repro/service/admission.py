@@ -20,14 +20,21 @@ Policies for jobs that do not fit right now:
 ``max_queue`` (optional) bounds the *waiting* queue under both policies:
 submissions arriving at a full queue are shed.
 
+Private-cloud jobs are additionally admitted against **physical cores**:
+a service fronting one finite cluster (``max_physical_cores``) keeps the
+sum of active private jobs' core demands (``estimate_job_cores``) under
+the metal actually available, so two tenants cannot both be promised the
+same hosts — public-cloud jobs rent elastically and are charged 0 cores.
+
 All decisions are counted (``AdmissionStats``) for the service dashboard.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.core.evaluators import workload_event_budget
+from repro.core.milp import rank_vm_types
 from repro.core.problem import Problem
 
 ADMIT, DEFER, SHED = "admit", "defer", "shed"
@@ -61,6 +68,24 @@ def estimate_job_events(problem: Problem, *, window: int, min_jobs: int,
     return total
 
 
+def estimate_job_cores(problem: Problem,
+                       deployment: Optional[object] = None) -> int:
+    """Physical cores one private-cloud job will contend for: the
+    analytic initial solution's core demand (head of ``rank_vm_types``),
+    capped at the deployment's own capacity — the coordinator never
+    plans past it (it truncates to fit instead).  Public jobs
+    (``deployment=None``) rent elastic capacity: charged 0."""
+    if deployment is None:
+        return 0
+    try:
+        ranking = rank_vm_types(problem)
+    except ValueError:           # nothing analytically feasible: the run
+        return 0                 # will fail at activation, charge nothing
+    demand = sum(cands[0].nu * problem.vm_by_name(cands[0].vm_type).cores
+                 for cands in ranking.values())
+    return min(demand, deployment.total_cores)
+
+
 @dataclass
 class AdmissionStats:
     admitted: int = 0
@@ -70,24 +95,32 @@ class AdmissionStats:
     oversize_admitted: int = 0   # ran alone because estimate > budget
     inflight_events: int = 0
     peak_inflight_events: int = 0
+    inflight_cores: int = 0      # physical cores promised to active jobs
+    peak_inflight_cores: int = 0
 
     def as_dict(self) -> dict:
         return asdict(self)
 
 
 class AdmissionController:
-    """Event-budget gate for the solver pool.  Not thread-safe on its own —
-    the cooperative engine calls it from one scheduling loop."""
+    """Event- and core-budget gate for the solver pool.  Not thread-safe
+    on its own — the cooperative engine calls it from one scheduling
+    loop.  ``max_physical_cores`` (optional) is the metal behind a
+    service that fronts one private cluster: the sum of active jobs'
+    core estimates stays under it."""
 
     def __init__(self, max_inflight_events: int = 16_000_000, *,
-                 policy: str = "queue", max_queue: int = None):
+                 policy: str = "queue", max_queue: int = None,
+                 max_physical_cores: Optional[int] = None):
         if policy not in ("queue", "shed"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.max_inflight_events = int(max_inflight_events)
         self.policy = policy
         self.max_queue = max_queue
+        self.max_physical_cores = max_physical_cores
         self.stats = AdmissionStats()
-        self._active: Dict[str, int] = {}    # job_id -> admitted estimate
+        # job_id -> (admitted event estimate, admitted core estimate)
+        self._active: Dict[str, tuple] = {}
 
     # ---------------------------------------------------------- submission
     def accept_submission(self, queue_len: int) -> bool:
@@ -101,10 +134,16 @@ class AdmissionController:
         return True
 
     # ----------------------------------------------------------- admission
-    def try_admit(self, job_id: str, events: int) -> str:
-        """ADMIT (and charge the budget), DEFER (keep queued), or SHED."""
+    def try_admit(self, job_id: str, events: int, cores: int = 0) -> str:
+        """ADMIT (and charge the budgets), DEFER (keep queued), or SHED.
+        ``cores`` is the job's physical-core demand (0 for public jobs);
+        it gates admission only when ``max_physical_cores`` is set."""
         events = int(events)
-        if events > self.max_inflight_events:
+        cores = int(cores)
+        oversize = events > self.max_inflight_events
+        if self.max_physical_cores is not None:
+            oversize = oversize or cores > self.max_physical_cores
+        if oversize:
             if self.policy == "shed":
                 self.stats.shed += 1
                 return SHED
@@ -112,18 +151,28 @@ class AdmissionController:
                 self.stats.deferred += 1
                 return DEFER
             self.stats.oversize_admitted += 1
-        elif self.stats.inflight_events + events > self.max_inflight_events:
-            self.stats.deferred += 1
-            return DEFER
-        self._active[job_id] = events
+        else:
+            over_events = self.stats.inflight_events + events \
+                > self.max_inflight_events
+            over_cores = self.max_physical_cores is not None \
+                and self.stats.inflight_cores + cores \
+                > self.max_physical_cores
+            if over_events or over_cores:
+                self.stats.deferred += 1
+                return DEFER
+        self._active[job_id] = (events, cores)
         self.stats.admitted += 1
         self.stats.inflight_events += events
+        self.stats.inflight_cores += cores
         self.stats.peak_inflight_events = max(
             self.stats.peak_inflight_events, self.stats.inflight_events)
+        self.stats.peak_inflight_cores = max(
+            self.stats.peak_inflight_cores, self.stats.inflight_cores)
         return ADMIT
 
     def release(self, job_id: str) -> None:
-        events = self._active.pop(job_id, 0)
+        events, cores = self._active.pop(job_id, (0, 0))
         self.stats.inflight_events -= events
-        if events:
+        self.stats.inflight_cores -= cores
+        if events or cores:
             self.stats.released += 1

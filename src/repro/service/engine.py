@@ -32,7 +32,7 @@ from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import Problem
 from repro.service.admission import ADMIT, SHED, AdmissionController, \
-    estimate_job_events
+    estimate_job_cores, estimate_job_events
 from repro.service.cache import EvalCache
 from repro.service.jobs import Job, JobState, parse_submission
 from repro.service.scheduler import FusionScheduler, SimSpec, WindowRequest
@@ -66,11 +66,17 @@ class SolverService:
     def submit(self, problem: Union[Problem, str], *, min_jobs: int = 40,
                warmup_jobs: int = 8, replications: int = 2, seed: int = 0,
                samples=None, window: Optional[int] = None,
-               race: bool = True, tag: Optional[str] = None) -> str:
+               race: bool = True, tag: Optional[str] = None,
+               deployment=None) -> str:
         """Queue one problem; returns the job id immediately.  ``problem``
         may be a ``Problem`` or a JSON submission (whose ``solver`` section
         overrides the keyword defaults).  ``race=False`` locks each class
-        to its analytic-argmin VM type instead of racing the catalog."""
+        to its analytic-argmin VM type instead of racing the catalog.
+        ``deployment`` (a ``PrivateCloud``, or its dict form inside a JSON
+        submission's solver section) plans the job against a finite
+        private cluster — overriding the problem document's own
+        ``deployment`` field; such jobs are also admitted against the
+        controller's physical-core budget."""
         kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
                   replications=replications, seed=seed)
         if isinstance(problem, str):
@@ -78,20 +84,26 @@ class SolverService:
             tag = overrides.pop("tag", tag)
             window = overrides.pop("window", window)
             race = overrides.pop("race", race)
+            deployment = overrides.pop("deployment", deployment)
             unknown = set(overrides) - set(kw)
             if unknown:                   # reject cleanly at intake, not as
                 raise ValueError(         # a TypeError from SimSpec(**kw)
-                    f"unknown solver option(s) {sorted(unknown)}; "
-                    f"valid: {sorted(kw)} + ['window', 'race', 'tag']")
+                    f"unknown solver option(s) {sorted(unknown)}; valid: "
+                    f"{sorted(kw)} + ['window', 'race', 'tag', "
+                    f"'deployment']")
             kw.update(overrides)
+        if deployment is None:
+            deployment = getattr(problem, "deployment", None)
         spec = SimSpec(**kw)
         job = Job(id=f"job-{next(self._seq):04d}", problem=problem,
                   spec=spec, window=window or self.window,
-                  race=race, samples=samples, tag=tag)
+                  race=race, samples=samples, tag=tag,
+                  deployment=deployment)
         job.events_estimate = estimate_job_events(
             problem, window=job.window, min_jobs=spec.min_jobs,
             warmup_jobs=spec.warmup_jobs, replications=spec.replications,
             race=job.race)
+        job.cores_estimate = estimate_job_cores(problem, deployment)
         self._jobs[job.id] = job
         if self.admission.accept_submission(len(self._queue)):
             self._queue.append(job.id)
@@ -111,7 +123,8 @@ class SolverService:
         admitted_until = 0
         for i, jid in enumerate(self._queue):
             job = self._jobs[jid]
-            verdict = self.admission.try_admit(jid, job.events_estimate)
+            verdict = self.admission.try_admit(jid, job.events_estimate,
+                                               job.cores_estimate)
             if verdict == ADMIT:
                 self._activate(job)
             elif verdict == SHED:
@@ -133,7 +146,7 @@ class SolverService:
                             replications=job.spec.replications,
                             seed=job.spec.seed, samples=job.samples,
                             batched=True, window=job.window,
-                            race=job.race)
+                            race=job.race, deployment=job.deployment)
         job._gen = tool.run_steps()
         try:
             job._pending = next(job._gen)

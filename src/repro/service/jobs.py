@@ -44,6 +44,9 @@ class Job:
     # MapReduce classes, a (n_stages, n_samples) array for DAG classes
     samples: Optional[Dict[Tuple[str, str], object]] = None
     tag: Optional[str] = None
+    # private deployment target (repro.cloud.hosts.PrivateCloud); None =
+    # public cloud.  A solver option: overrides the problem's own field.
+    deployment: Optional[object] = None
     state: str = JobState.QUEUED
     submitted_s: float = field(default_factory=time.time)
     started_s: Optional[float] = None
@@ -51,6 +54,7 @@ class Job:
     report: Optional[RunReport] = None
     error: Optional[str] = None
     events_estimate: int = 0
+    cores_estimate: int = 0       # physical cores (private-cloud jobs only)
     # engine internals: the resumable run generator + its pending windows
     _gen: object = None
     _pending: list = None
@@ -64,6 +68,7 @@ class Job:
         out = {"id": self.id, "state": self.state, "tag": self.tag,
                "classes": len(self.problem.classes),
                "events_estimate": self.events_estimate,
+               "cores_estimate": self.cores_estimate,
                "submitted_s": self.submitted_s,
                "started_s": self.started_s, "finished_s": self.finished_s,
                "error": self.error}
@@ -71,6 +76,7 @@ class Job:
             out["total_cost_per_h"] = self.report.total_cost_per_h
             out["solutions"] = {k: v.as_dict()
                                 for k, v in self.report.solutions.items()}
+            out["deployment"] = self.report.deployment
         return out
 
 
@@ -78,7 +84,7 @@ def parse_submission(text: str) -> Tuple[Problem, dict]:
     """Decode one JSON submission: ``{"problem": {...}, "solver": {...}}``
     (or a bare problem document).  Returns the problem and the solver
     keyword overrides (min_jobs, warmup_jobs, replications, seed, window,
-    race, tag)."""
+    race, tag, deployment — the latter decoded to a ``PrivateCloud``)."""
     raw = json.loads(text)
     if "problem" in raw:
         solver = dict(raw.get("solver") or {})
@@ -86,4 +92,7 @@ def parse_submission(text: str) -> Tuple[Problem, dict]:
     else:
         solver = {}
         problem = Problem.from_json(text)
+    if solver.get("deployment") is not None:
+        from repro.cloud.hosts import deployment_from_dict
+        solver["deployment"] = deployment_from_dict(solver["deployment"])
     return problem, solver

@@ -82,8 +82,6 @@ def test_diloco_round_and_resync():
                 lambda *xs: jnp.stack(xs), *bs))
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_pod)
 
-    round_fn = jax.jit(make_diloco_round(dcfg, step, batch_fn),
-                       static_argnums=())
     losses = []
     for r in range(3):
         pod_states, outer, m = make_diloco_round(dcfg, step, batch_fn)(

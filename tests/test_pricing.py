@@ -1,6 +1,7 @@
-"""Reserved/spot mix optimality (P1h/P1i) — unit tests + edge cases run
-always; the hypothesis property tests skip cleanly when the package is
-absent (it is optional, see requirements-dev.txt)."""
+"""Pricing invariants — the reserved/spot mix (P1h/P1i), day-long
+reserved contracts, and the private-cloud energy path.  Unit tests +
+edge-case grids run always; the hypothesis property tests skip cleanly
+when the package is absent (it is optional, see requirements-dev.txt)."""
 
 import pytest
 
@@ -10,7 +11,14 @@ try:
 except ImportError:                                      # pragma: no cover
     HAVE_HYPOTHESIS = False
 
-from repro.core.pricing import mix_cost, optimal_mix
+from repro.cloud.hosts import Host, homogeneous_hosts
+from repro.core.pricing import (
+    day_mix_cost,
+    host_energy_cost,
+    mix_cost,
+    optimal_day_mix,
+    optimal_mix,
+)
 from repro.core.problem import VMType
 
 VM = VMType(name="t", cores=4, sigma=0.07, pi=0.22)
@@ -80,11 +88,104 @@ def test_spot_floor_never_violates_p1h_dense_grid():
                 assert s <= eta / (1.0 - eta) * r + 1e-9, (nu, eta, r, s)
 
 
+# -------------------------------------------------- day-long contracts
+
+DAY_VM = VMType(name="d", cores=4, sigma=0.07, pi=0.22)        # sigma < pi
+DAY_VM_EXP_SPOT = VMType(name="e", cores=4, sigma=0.30, pi=0.22)  # >= pi
+
+
+def _brute_force_day_cost(nus, eta, vm):
+    """Exhaustive optimum over every admissible constant reserved count:
+    R must let each window's excess ride spot within P1h."""
+    import math
+    w = len(nus)
+    r_min = max(n - int(math.floor(eta * n)) for n in nus)
+    best = float("inf")
+    for r in range(r_min, max(nus) + 1):
+        cost = vm.pi * r * w + vm.sigma * sum(max(0, n - r) for n in nus)
+        best = min(best, cost)
+    return best
+
+
+def test_day_mix_single_window_degenerates_to_optimal_mix():
+    for vm in (DAY_VM, DAY_VM_EXP_SPOT):
+        for nu in (1, 7, 40):
+            for eta in (0.0, 0.25, 0.6):
+                r, spots, cost = optimal_day_mix([nu], eta, vm)
+                r1, s1, c1 = optimal_mix(nu, eta, vm)
+                assert (r, spots[0], cost) == (r1, s1, pytest.approx(c1))
+
+
+def test_day_mix_reserved_covers_max_nonspot_share():
+    # sigma < pi: reserved sits exactly at the P1h floor — the max over
+    # windows of the non-spot-eligible share — and spot fills the peaks
+    nus = [2, 4, 6, 6, 4, 2]
+    r, spots, cost = optimal_day_mix(nus, 0.25, DAY_VM)
+    import math
+    assert r == max(n - math.floor(0.25 * n) for n in nus)      # == 5
+    assert spots == [max(0, n - r) for n in nus]
+    for n, s in zip(nus, spots):
+        assert s <= math.floor(0.25 * n) + 1e-9                 # P1h
+    assert cost == pytest.approx(_brute_force_day_cost(nus, 0.25, DAY_VM))
+
+
+def test_day_mix_expensive_spot_climbs_to_quantile():
+    # sigma >= pi: a peak hit in most windows is cheaper covered reserved
+    nus = [8] * 20 + [4] * 4
+    r, spots, cost = optimal_day_mix(nus, 0.5, DAY_VM_EXP_SPOT)
+    assert r == 8 and sum(spots) == 0         # all-reserved beats spot
+    assert cost == pytest.approx(
+        _brute_force_day_cost(nus, 0.5, DAY_VM_EXP_SPOT))
+
+
+def test_day_mix_empty_and_idle_days():
+    assert optimal_day_mix([], 0.3, DAY_VM) == (0, [], 0.0)
+    r, spots, cost = optimal_day_mix([0, 0, 0], 0.3, DAY_VM)
+    assert (r, spots, cost) == (0, [0, 0, 0], 0.0)
+
+
+def test_day_mix_brute_force_grid():
+    # optimality against exhaustive search across regimes either side of
+    # the sigma/pi crossover, including sigma == pi exactly
+    profiles = [[1, 5, 9], [3] * 6, [2, 4, 6, 6, 4, 2], [10, 1, 1, 1]]
+    for sigma in (0.05, 0.22, 0.40):
+        vm = VMType(name="g", cores=2, sigma=sigma, pi=0.22)
+        for eta in (0.0, 0.25, 0.5, 0.99):
+            for nus in profiles:
+                assert day_mix_cost(nus, eta, vm) == pytest.approx(
+                    _brute_force_day_cost(nus, eta, vm)), (sigma, eta, nus)
+
+
+# ------------------------------------------------------- energy pricing
+
+def test_host_energy_cost_sums_powered_hosts():
+    hosts = [Host(name="a", cores=8, energy_cost_per_h=0.4),
+             Host(name="b", cores=16, energy_cost_per_h=0.9)]
+    assert host_energy_cost(hosts) == pytest.approx(1.3)
+    assert host_energy_cost([]) == 0.0
+
+
+def test_homogeneous_hosts_energy_and_defaults():
+    hosts = homogeneous_hosts(5, 8, energy_cost_per_h=0.25)
+    assert host_energy_cost(hosts) == pytest.approx(1.25)
+    # default memory: DEFAULT_GB_PER_CORE per core (never binds unless set)
+    assert all(h.memory_gb == pytest.approx(32.0) for h in hosts)
+
+
+# ------------------------------------------------- hypothesis properties
+
 if HAVE_HYPOTHESIS:
-    @given(nu=st.integers(0, 500), eta=st.floats(0.0, 0.9),
-           sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0))
-    @settings(max_examples=200, deadline=None)
-    def test_mix_invariants(nu, eta, sigma, pi):
+    @given(nu=st.integers(0, 500),
+           # eta up to (and including) 1.0: the P1h slope explodes as
+           # eta -> 1 and the bound goes vacuous at exactly 1
+           eta=st.one_of(st.floats(0.0, 1.0),
+                         st.floats(0.99, 1.0)),       # oversample the edge
+           sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0),
+           force_sigma_eq_pi=st.booleans())
+    @settings(max_examples=300, deadline=None)
+    def test_mix_invariants(nu, eta, sigma, pi, force_sigma_eq_pi):
+        if force_sigma_eq_pi:
+            sigma = pi                    # the crossover boundary itself
         vm = VMType(name="x", cores=2, sigma=sigma, pi=pi)
         r, s, cost = optimal_mix(nu, eta, vm)
         assert r + s == nu and r >= 0 and s >= 0
@@ -102,3 +203,23 @@ if HAVE_HYPOTHESIS:
     def test_cost_monotone_in_nu(eta):
         costs = [mix_cost(nu, eta, VM) for nu in range(0, 50)]
         assert all(b >= a - 1e-12 for a, b in zip(costs, costs[1:]))
+
+    @given(nus=st.lists(st.integers(0, 30), min_size=1, max_size=12),
+           eta=st.floats(0.0, 0.9),
+           sigma=st.floats(0.01, 1.0), pi=st.floats(0.01, 1.0),
+           force_sigma_eq_pi=st.booleans())
+    @settings(max_examples=200, deadline=None)
+    def test_day_mix_optimal_and_p1h(nus, eta, sigma, pi,
+                                     force_sigma_eq_pi):
+        import math
+        if force_sigma_eq_pi:
+            sigma = pi
+        vm = VMType(name="x", cores=2, sigma=sigma, pi=pi)
+        r, spots, cost = optimal_day_mix(nus, eta, vm)
+        if max(nus, default=0) == 0:
+            assert (r, cost) == (0, 0.0)
+            return
+        for n, s in zip(nus, spots):
+            assert s == max(0, n - r)                   # contract covers rest
+            assert s <= math.floor(eta * n) + 1e-9      # P1h per window
+        assert cost == pytest.approx(_brute_force_day_cost(nus, eta, vm))

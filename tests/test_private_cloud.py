@@ -1,0 +1,435 @@
+"""The private-cloud deployment plane (``repro.cloud``).
+
+Pinned here:
+
+  * placement: greedy packers respect host capacities; the jnp-batched
+    feasibility check agrees with a numpy reference over valid,
+    overloaded, and unplaced candidates, across padded fleet sizes;
+  * joint coordination: with unbounded capacity the public-cloud result
+    passes through BIT-EXACT (every gait); on an over-committed cluster
+    the dual price shifts classes to core-efficient VM types, the packed
+    plan is feasible, and its (violations, cost) can never be worse than
+    the naive baseline — independently-optimized classes truncated to
+    fit; all coordination probes flow fused (one batched QN dispatch per
+    probe round in a single-fusion-group scenario);
+  * the optimizer facade carries the deployment through ``run``,
+    ``run_fast``, ``run_steps`` and the JSON problem round-trip;
+  * the service solves private-cloud jobs identically to solo runs and
+    admits them against the physical-core budget;
+  * 24-hour windowed planning: day contracts are P1h-optimal, windows
+    fuse (a day with K distinct concurrency levels costs about K single-
+    window dispatch budgets), and private-cloud days validate every
+    window's packing in one batched call.
+"""
+import numpy as np
+import pytest
+
+from repro.cloud import (
+    Host,
+    PrivateCloud,
+    coordinate,
+    feasibility_batch,
+    fleet_of,
+    homogeneous_hosts,
+    pack,
+    pack_ffd,
+)
+from repro.cloud.placement import pad_batch
+from repro.cloud.windows import plan_day
+from repro.core import qn_sim
+from repro.core.optimizer import DSpace4Cloud
+from repro.core.problem import (
+    ApplicationClass,
+    ClassSolution,
+    JobProfile,
+    Problem,
+    VMType,
+)
+from repro.core.pricing import optimal_mix
+from repro.service import AdmissionController, SolverService, \
+    estimate_job_cores
+
+ROOMY = VMType(name="roomy", cores=4, sigma=0.05, pi=0.20)
+DENSE = VMType(name="dense", cores=2, sigma=0.055, pi=0.22,
+               containers_per_core=2)        # same 4 slots, half the cores
+PROF = JobProfile(n_map=24, n_reduce=6, m_avg=2000, r_avg=900,
+                  m_max=4000, r_max=1800)
+KW = dict(min_jobs=8, replications=1, seed=3, window=8)
+
+
+def make_problem(n_classes=3, deployment=None, vm_types=(ROOMY, DENSE)):
+    classes = [
+        ApplicationClass(name=f"c{i}", h_users=4, think_ms=6000.0,
+                         deadline_ms=11_000.0, eta=0.25,
+                         profiles={vm.name: PROF for vm in vm_types})
+        for i in range(n_classes)]
+    return Problem(classes=classes, vm_types=list(vm_types),
+                   deployment=deployment)
+
+
+def sols_for(problem, assign):
+    """{name: (vm_name, nu)} -> ClassSolution dict (analytic costs)."""
+    out = {}
+    for name, (vm_name, nu) in assign.items():
+        cls = next(c for c in problem.classes if c.name == name)
+        vm = problem.vm_by_name(vm_name)
+        r, s, cost = optimal_mix(nu, cls.eta, vm)
+        out[name] = ClassSolution(vm_type=vm_name, nu=nu, reserved=r,
+                                  spot=s, cost_per_h=cost,
+                                  predicted_ms=1.0, feasible=True)
+    return out
+
+
+# ---------------------------------------------------------------- placement
+
+def test_pack_ffd_respects_host_capacity():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(3, 8))
+    cores = np.array([6, 4, 4, 4, 2, 2, 2], np.float32)   # packs exactly
+    mem = np.array([8.0] * 7, np.float32)
+    asg = pack_ffd(cores, mem, cloud)
+    assert (asg >= 0).all()
+    for h in range(3):
+        assert cores[asg == h].sum() <= 8
+
+
+def test_pack_prefers_low_energy_hosts():
+    cloud = PrivateCloud(hosts=[
+        Host(name="hot", cores=16, energy_cost_per_h=2.0),
+        Host(name="cool", cores=16, energy_cost_per_h=0.5)])
+    prob = make_problem(1, vm_types=(ROOMY,))
+    place = pack(prob, sols_for(prob, {"c0": ("roomy", 3)}), cloud)
+    assert place.feasible and place.hosts_used == 1
+    assert place.energy_cost_per_h == pytest.approx(0.5)
+
+
+def test_pack_reports_overcommit():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(2, 4))
+    prob = make_problem(1, vm_types=(ROOMY,))
+    place = pack(prob, sols_for(prob, {"c0": ("roomy", 5)}), cloud)
+    assert not place.feasible and place.unplaced >= 1
+    assert place.cores_total == 8
+
+
+def test_pack_empty_fleet_is_trivially_feasible():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(2, 4))
+    place = pack(make_problem(1), {}, cloud)
+    assert place.feasible and place.hosts_used == 0
+    assert place.energy_cost_per_h == 0.0
+
+
+def _np_feasible(asg, vc, vmem, hc, hm):
+    for v in range(len(asg)):
+        if vc[v] > 0 and asg[v] < 0:
+            return False
+    for h in range(len(hc)):
+        m = asg == h
+        if vc[m].sum() > hc[h] + 1e-6 or vmem[m].sum() > hm[h] + 1e-6:
+            return False
+    return True
+
+
+def test_feasibility_batch_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    hc = np.array([8, 8, 16], np.float32)
+    hm = np.array([32, 32, 64], np.float32)
+    b, v = 24, 7
+    asg = rng.integers(-1, 3, size=(b, v))
+    vc = rng.choice([0.0, 2.0, 4.0, 6.0], size=(b, v)).astype(np.float32)
+    vmem = (vc * 4).astype(np.float32)
+    got = feasibility_batch(asg, vc, vmem, hc, hm)
+    want = [_np_feasible(asg[i], vc[i], vmem[i], hc, hm) for i in range(b)]
+    assert got.tolist() == want
+    assert any(want) and not all(want)     # the sample spans both verdicts
+
+
+def test_feasibility_batch_pads_across_fleet_sizes():
+    hc = np.array([8, 8], np.float32)
+    hm = np.array([32, 32], np.float32)
+    fleets = [
+        (np.array([0, 1]), np.array([8.0, 8.0]), np.array([4.0, 4.0])),
+        (np.array([0, 0, 1, 1]), np.array([4.0] * 4), np.array([4.0] * 4)),
+        (np.array([0, 0]), np.array([8.0, 8.0]), np.array([4.0, 4.0])),
+    ]
+    a, vc, vmem = pad_batch(fleets)
+    assert a.shape == (3, 4)               # padded to the largest fleet
+    ok = feasibility_batch(a, vc, vmem, hc, hm)
+    assert ok.tolist() == [True, True, False]   # host 0 at 16 > 8 cores
+
+
+def test_fleet_expansion_counts_every_vm():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(4, 8),
+                         vm_memory_gb={"dense": 3.0})
+    prob = make_problem(2)
+    cores, mem, labels = fleet_of(
+        prob, sols_for(prob, {"c0": ("roomy", 2), "c1": ("dense", 3)}),
+        cloud)
+    assert len(cores) == 5
+    assert sorted(labels).count("c1@dense") == 3
+    assert mem[np.asarray(labels) == "c1@dense"].tolist() == [3.0] * 3
+    assert cores.sum() == 2 * 4 + 3 * 2
+
+
+# ------------------------------------------------------------ hosts + JSON
+
+def test_private_cloud_json_round_trip_via_problem():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(3, 8,
+                                                 energy_cost_per_h=0.4),
+                         vm_memory_gb={"dense": 6.0}, name="lab")
+    prob = make_problem(1, deployment=cloud)
+    back = Problem.from_json(prob.to_json())
+    assert back.deployment.name == "lab"
+    assert back.deployment.total_cores == 24
+    assert back.deployment.vm_mem(DENSE) == 6.0
+    assert [h.rack for h in back.deployment.hosts] == \
+        [h.rack for h in cloud.hosts]
+    # and the public problem stays deployment-free
+    assert Problem.from_json(make_problem(1).to_json()).deployment is None
+
+
+# ----------------------------------------------------- joint (stub tier)
+
+def _stub(boundary_by_vm):
+    """T = D * nu*(vm) / nu: monotone, feasible from the boundary up."""
+    def evaluate(cls, vm, nu):
+        return cls.deadline_ms * boundary_by_vm[vm.name] / nu
+    return evaluate
+
+
+def test_coordinate_unbounded_returns_base_untouched():
+    prob = make_problem(2)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(32, 8))
+    base = sols_for(prob, {"c0": ("roomy", 4), "c1": ("roomy", 4)})
+    lanes = {n: [(ROOMY, 4), (DENSE, 4)] for n in ("c0", "c1")}
+
+    def poison(cls, vm, nu):                 # must never be called
+        raise AssertionError("unbounded coordination probed the QN tier")
+
+    plan = coordinate(prob, cloud, base, lanes, poison)
+    assert not plan.coordinated and plan.solutions is base
+    assert plan.placement.feasible and plan.probe_rounds == 0
+
+
+def test_coordinate_shifts_to_core_efficient_lane():
+    prob = make_problem(3)
+    # roomy fleet needs 3*4*4 = 48 cores; dense fits in 24
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4))
+    base = sols_for(prob, {n: ("roomy", 4) for n in ("c0", "c1", "c2")})
+    lanes = {n: [(ROOMY, 4), (DENSE, 4)] for n in ("c0", "c1", "c2")}
+    plan = coordinate(prob, cloud, base, lanes,
+                      _stub({"roomy": 4, "dense": 4}))
+    assert plan.coordinated and not plan.used_fallback
+    assert plan.placement.feasible and plan.violations == 0
+    assert all(s.vm_type == "dense" for s in plan.solutions.values())
+    assert plan.dual_price > 0
+    # acceptance invariant: never worse than the truncated baseline
+    assert (plan.violations, plan.cost_per_h) <= \
+        (violations_of(plan.baseline), cost_of(plan.baseline))
+    assert plan.objective <= plan.baseline_objective
+
+
+def violations_of(sols):
+    return sum(1 for s in sols.values() if not s.feasible)
+
+
+def cost_of(sols):
+    return sum(s.cost_per_h for s in sols.values())
+
+
+def test_coordinate_falls_back_to_truncation_but_beats_baseline():
+    # a single VM type: pricing cores cannot shift anything, so the plan
+    # must degrade gracefully — and still never lose to the baseline
+    prob = make_problem(2, vm_types=(ROOMY,))
+    cloud = PrivateCloud(hosts=homogeneous_hosts(2, 4))   # 8 cores total
+    base = sols_for(prob, {"c0": ("roomy", 4), "c1": ("roomy", 4)})
+    lanes = {n: [(ROOMY, 4)] for n in ("c0", "c1")}
+    plan = coordinate(prob, cloud, base, lanes, _stub({"roomy": 4}))
+    assert plan.coordinated and plan.used_fallback
+    assert plan.placement.feasible
+    assert plan.violations >= 1                  # capacity forced a degrade
+    assert (plan.violations, plan.cost_per_h) <= \
+        (violations_of(plan.baseline), cost_of(plan.baseline))
+
+
+# --------------------------------------------------- real QN, end to end
+
+def test_unbounded_private_cloud_is_bit_exact_with_public_run():
+    prob = make_problem(2)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(40, 8,
+                                                 energy_cost_per_h=0.4))
+    pub = DSpace4Cloud(prob, **KW).run()
+    priv = DSpace4Cloud(prob, deployment=cloud, **KW).run()
+    assert priv.solutions == pub.solutions       # bit-exact pass-through
+    assert priv.deployment is not None
+    assert not priv.deployment["coordinated"]
+    assert priv.deployment["placement"]["feasible"]
+    assert pub.deployment is None
+
+
+def test_unbounded_private_cloud_is_bit_exact_with_public_run_fast():
+    prob = make_problem(2)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(40, 8))
+    pub = DSpace4Cloud(prob, **KW).run_fast()
+    priv = DSpace4Cloud(prob, deployment=cloud, **KW).run_fast()
+    assert priv.solutions == pub.solutions
+    assert not priv.deployment["coordinated"]
+
+
+def test_overcommitted_cluster_coordinates_with_fused_probes():
+    prob = make_problem(3)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4,
+                                                 energy_cost_per_h=0.3))
+    d0 = qn_sim.dispatch_count()
+    rep = DSpace4Cloud(prob, deployment=cloud, **KW).run()
+    total_dispatches = qn_sim.dispatch_count() - d0
+    dep = rep.deployment
+    assert dep["coordinated"] and dep["placement"]["feasible"]
+    assert dep["violations"] == 0
+    assert all(s.vm_type == "dense" for s in rep.solutions.values())
+    assert dep["objective"] <= dep["baseline_objective"]
+    # all classes share one fusion group (same kind/h/samples), so every
+    # coordination probe round is ONE fused dispatch on top of the base
+    # race's single dispatch
+    assert total_dispatches <= 1 + dep["probe_rounds"]
+    assert dep["probe_rounds"] >= 1
+
+
+def test_problem_document_deployment_is_honoured():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4))
+    prob = make_problem(3, deployment=cloud)
+    rep = DSpace4Cloud(prob, **KW).run()         # no explicit keyword
+    assert rep.deployment is not None and rep.deployment["coordinated"]
+
+
+def test_run_steps_yields_coordination_requests_with_rids():
+    prob = make_problem(3)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4))
+    tool = DSpace4Cloud(prob, deployment=cloud, **KW)
+    gen = tool.run_steps()
+    reqs, results = next(gen), None
+    while True:
+        assert all("@" in r.rid for r in reqs)
+        results = {r.rid: tool.evaluate.evaluate_frontier(r.cls, r.vm,
+                                                          r.nus)
+                   for r in reqs}
+        try:
+            reqs = gen.send(results)
+        except StopIteration as stop:
+            rep = stop.value
+            break
+    solo = DSpace4Cloud(prob, deployment=cloud, **KW).run()
+    assert rep.solutions == solo.solutions
+    assert rep.deployment["coordinated"]
+
+
+# ----------------------------------------------------------------- service
+
+def test_service_private_job_matches_solo_run():
+    prob = make_problem(3)
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4))
+    solo = DSpace4Cloud(prob, deployment=cloud, **KW).run()
+    svc = SolverService(window=KW["window"])
+    jid = svc.submit(prob, deployment=cloud, min_jobs=8, replications=1,
+                     seed=3)
+    jobs = svc.run_until_complete()
+    assert jobs[jid].report.solutions == solo.solutions
+    assert jobs[jid].report.deployment["coordinated"]
+    assert jobs[jid].cores_estimate > 0
+
+
+def test_estimate_job_cores_public_vs_private():
+    prob = make_problem(2)
+    assert estimate_job_cores(prob, None) == 0
+    big = PrivateCloud(hosts=homogeneous_hosts(64, 8))
+    est = estimate_job_cores(prob, big)
+    assert est > 0
+    tiny = PrivateCloud(hosts=homogeneous_hosts(1, 4))
+    assert estimate_job_cores(prob, tiny) == 4        # capped at capacity
+
+
+def test_admission_defers_private_jobs_beyond_core_budget():
+    ctl = AdmissionController(max_physical_cores=24)
+    assert ctl.try_admit("a", events=10, cores=20) == "admit"
+    assert ctl.try_admit("b", events=10, cores=20) == "defer"
+    assert ctl.try_admit("pub", events=10, cores=0) == "admit"
+    ctl.release("a")
+    assert ctl.try_admit("b", events=10, cores=20) == "admit"
+    assert ctl.stats.peak_inflight_cores == 20
+    ctl.release("b")
+    ctl.release("pub")
+    assert ctl.stats.inflight_cores == 0
+
+
+def test_admission_oversize_private_job_runs_alone():
+    ctl = AdmissionController(max_physical_cores=16)
+    assert ctl.try_admit("a", events=10, cores=8) == "admit"
+    # demands more metal than the service fronts: waits for solitude
+    assert ctl.try_admit("big", events=10, cores=40) == "defer"
+    ctl.release("a")
+    assert ctl.try_admit("big", events=10, cores=40) == "admit"
+    assert ctl.stats.oversize_admitted == 1
+
+
+# ----------------------------------------------------------------- windows
+
+def test_plan_day_contracts_and_fusion():
+    prob = make_problem(2)
+    day = {"c0": [2] * 3 + [4] * 3, "c1": [2] * 6}
+    d0 = qn_sim.dispatch_count()
+    single = DSpace4Cloud(prob, **KW).run()
+    d_single = max(1, qn_sim.dispatch_count() - d0)
+    plan = plan_day(prob, day, **KW)
+    assert len(plan.reports) == 6
+    # two distinct concurrency levels -> about two single-window budgets
+    assert plan.qn_dispatches <= 4 * d_single
+    # contracts: reserved covers the max non-spot share across windows,
+    # every window's allocation is contract + spot
+    for c in plan.contracts:
+        vm = prob.vm_by_name(c.vm_type)
+        r_check, spots, cost = __import__(
+            "repro.core.pricing", fromlist=["optimal_day_mix"]
+        ).optimal_day_mix(c.nus, 0.25, vm)
+        assert (c.reserved, c.spots, c.day_cost) == \
+            (r_check, spots, pytest.approx(cost))
+    assert plan.vm_day_cost >= plan.naive_hourly_cost - 1e-9
+    assert single.solutions  # single run solved (guards d_single above)
+
+
+def test_plan_day_constant_profile_windows_are_cache_hits():
+    prob = make_problem(2)
+    day = {"c0": [4] * 5, "c1": [4] * 5}       # one level: later windows
+    d0 = qn_sim.dispatch_count()               # replay the first for free
+    plan = plan_day(prob, day, **KW)
+    d_day = qn_sim.dispatch_count() - d0
+    d0 = qn_sim.dispatch_count()
+    DSpace4Cloud(prob, **KW).run()
+    d_single = qn_sim.dispatch_count() - d0
+    assert d_day <= max(d_single, 1)
+    sols0 = plan.reports[0].solutions
+    assert all(r.solutions == sols0 for r in plan.reports[1:])
+
+
+def test_plan_day_private_cloud_validates_every_window():
+    cloud = PrivateCloud(hosts=homogeneous_hosts(6, 4,
+                                                 energy_cost_per_h=0.3))
+    prob = make_problem(3)
+    day = {f"c{i}": [4, 4, 4] for i in range(3)}
+    plan = plan_day(prob, day, deployment=cloud, **KW)
+    assert plan.windows_feasible == [True, True, True]
+    assert plan.energy_day_cost > 0
+    for rep in plan.reports:
+        assert rep.deployment["placement"]["feasible"]
+
+
+def test_plan_day_idle_hours_drop_classes():
+    prob = make_problem(2)
+    day = {"c0": [0, 4], "c1": [4, 4]}
+    plan = plan_day(prob, day, **KW)
+    assert "c0" not in plan.reports[0].solutions
+    assert "c0" in plan.reports[1].solutions
+    c0 = next(c for c in plan.contracts if c.cls == "c0")
+    assert c0.nus[0] == 0
+
+
+def test_plan_day_rejects_uneven_profiles():
+    with pytest.raises(ValueError, match="uneven"):
+        plan_day(make_problem(2), {"c0": [1, 2], "c1": [1, 2, 3]}, **KW)
