@@ -57,6 +57,25 @@ def run(quick: bool = False):
          f"candidates_per_s={n/t_amva:.2e};"
          f"paper_equivalent=1 JMT run per candidate (~minutes each)")
 
+    from repro.kernels.amva import ops as amva_ops
+    t_amva_k = _time(amva_ops.ps_fixed_point, a, b, z, h)
+    emit("amva_kernel_4096", t_amva_k * 1e6,
+         f"candidates_per_s={n/t_amva_k:.2e};"
+         f"jnp_us={t_amva*1e6:.0f};ratio={t_amva_k/t_amva:.2f}")
+
+    from repro.core import qn_sim
+    from repro.kernels.qn_event import ops as qn_event_ops
+    from repro.launch.qn_record import _qn_batch
+    cell = dict(batch=8, n_map=8, n_reduce=2, m_avg=40.0, r_avg=60.0,
+                think_ms=1000.0, h_users=3, min_jobs=8, warmup_jobs=2)
+    args, statics = _qn_batch(**cell)
+    events = statics["n_events"] * cell["batch"]
+    t_jnp = _time(lambda: qn_sim._sim_batch_jit(*args, **statics))
+    t_pal = _time(lambda: qn_event_ops.sim_batch(*args, **statics))
+    emit("qn_event_step_b8", t_pal * 1e6,
+         f"events_per_s_pallas={events/t_pal:.2e};"
+         f"events_per_s_jnp={events/t_jnp:.2e};n_events={statics['n_events']}")
+
 
 if __name__ == "__main__":
     run()

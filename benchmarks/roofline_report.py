@@ -1,5 +1,15 @@
-"""§Roofline deliverable: three roofline terms per compiled cell, dominant
-bottleneck, model-FLOPs ratio — read from the dry-run record."""
+"""§Roofline deliverable, two panels:
+
+  * optimizer kernels — ALWAYS measured fresh (``launch/qn_record.py``):
+    batched QN event simulator (jnp scan vs fused Pallas event-step) and
+    batched AMVA fixed point (jnp vs tiled Pallas), with compiled
+    FLOPs/bytes, measured events/s / candidates/s and the bit-parity
+    verdict.  This is the paper's actual hot path, so the report is never
+    SKIPPED: the record is regenerated on every run.
+  * model cells — three roofline terms per compiled (arch x shape x mesh)
+    cell from the model dry-run record, when ``results/dryrun.json``
+    exists (it needs the heavyweight multi-device dry run).
+"""
 from __future__ import annotations
 
 import os
@@ -7,29 +17,64 @@ import os
 import numpy as np
 
 from benchmarks.common import emit, save_json, timer
-from repro.launch.roofline import analyze_file, format_table
+from repro.launch.qn_record import record_qn_cells
+from repro.launch.roofline import (
+    analyze_file,
+    analyze_qn_file,
+    format_kernel_table,
+    format_table,
+)
 
 DRYRUN = "results/dryrun.json"
+DRYRUN_QN = "results/dryrun_qn.json"
 
 
 def run(quick: bool = False):
-    if not os.path.exists(DRYRUN):
-        emit("roofline_report", 0.0, "SKIPPED:no dryrun record")
-        return None
     with timer() as t:
-        rows = analyze_file(DRYRUN)
-    print(format_table(rows))
-    save_json("roofline", [r.as_dict() for r in rows])
-    single = [r for r in rows if r.mesh == "16x16"]
-    fracs = np.array([r.roofline_fraction for r in single])
-    bounds = {}
-    for r in single:
-        bounds[r.bottleneck] = bounds.get(r.bottleneck, 0) + 1
-    emit("roofline_report", t.s / max(len(rows), 1) * 1e6,
-         f"cells={len(rows)};median_frac={np.median(fracs):.2f};"
-         f"bottlenecks={bounds}")
-    return rows
+        record_qn_cells(out=DRYRUN_QN, quick=quick)
+        krows = analyze_qn_file(DRYRUN_QN)
+    print(format_kernel_table(krows))
+    save_json("roofline_kernels", [r.as_dict() for r in krows])
+
+    def ev(impl):
+        per_s = [r.throughput for r in krows
+                 if r.cell == "qn_event" and r.impl == impl]
+        return max(per_s) if per_s else 0.0
+
+    parity = all(r.parity_bit_exact in (True, None) for r in krows)
+    metrics = {
+        "qn_events_per_s_jnp": ev("jnp"),
+        "qn_events_per_s_pallas": ev("pallas"),
+        "parity_bit_exact": parity,
+        "kernel_cells": len(krows),
+    }
+    derived = (f"qn_cells={len(krows)};jnp={ev('jnp'):.3e}ev/s;"
+               f"pallas={ev('pallas'):.3e}ev/s;parity={parity}")
+
+    mrows = []
+    if os.path.exists(DRYRUN):
+        mrows = analyze_file(DRYRUN)
+        print(format_table(mrows))
+        save_json("roofline", [r.as_dict() for r in mrows])
+        single = [r for r in mrows if r.mesh == "16x16"]
+        fracs = np.array([r.roofline_fraction for r in single])
+        bounds = {}
+        for r in single:
+            bounds[r.bottleneck] = bounds.get(r.bottleneck, 0) + 1
+        metrics["model_cells"] = len(mrows)
+        derived += (f";model_cells={len(mrows)};"
+                    f"median_frac={np.median(fracs):.2f};"
+                    f"bottlenecks={bounds}")
+    else:
+        derived += ";model_cells=0(no dryrun record)"
+
+    emit("roofline_report", t.s / max(len(krows) + len(mrows), 1) * 1e6,
+         derived, metrics=metrics)
+    return krows, mrows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

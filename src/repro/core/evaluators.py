@@ -126,9 +126,14 @@ def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
                   h_users: int, slots: Sequence[int], *,
                   min_jobs: int = 40, warmup_jobs: int = 8,
                   replications: int = 2, seed: int = 0,
-                  m_samples=None, r_samples=None) -> np.ndarray:
+                  m_samples=None, r_samples=None,
+                  impl: Optional[str] = None) -> np.ndarray:
     """ONE fused simulator dispatch over heterogeneous points of a fusion
     group (shared ``h_users``, replay lists, and simulation parameters).
+
+    ``impl`` selects the simulator backend — ``"jnp"`` (lax.scan) or
+    ``"pallas"`` (fused event-step kernel, bit-identical; see
+    docs/kernels.md) — and defaults to ``qn_sim.default_impl()``.
 
     ``profs``/``think_ms``/``slots`` are aligned per-point sequences; the
     points may come from different classes, VM types — or, in the service,
@@ -148,7 +153,7 @@ def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
         slots=np.asarray(slots, np.int64),
         min_jobs=min_jobs, warmup_jobs=warmup_jobs,
         seed=seed, replications=replications,
-        m_samples=m_samples, r_samples=r_samples)
+        m_samples=m_samples, r_samples=r_samples, impl=impl)
 
 
 def fused_dag_call(jobs: Sequence["object"], think_ms: Sequence[float],
@@ -171,13 +176,16 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
                     think_ms: Sequence[float], h_users: int,
                     slots: Sequence[int], *, min_jobs: int = 40,
                     warmup_jobs: int = 8, replications: int = 2,
-                    seed: int = 0, samples=None) -> np.ndarray:
+                    seed: int = 0, samples=None,
+                    impl: Optional[str] = None) -> np.ndarray:
     """Workload dispatch of a fusion group: route MapReduce windows to
     ``fused_qn_call`` and DAG windows to ``fused_dag_call``.  ``samples``
     is the group-shared replay payload in the kind's native form (an
     ``(m_list, r_list)`` pair, or a ``(K, NS)`` array).  This is the single
     marshaling point both ``BatchedQNEvaluator`` and the service's
-    ``FusionScheduler`` dispatch through."""
+    ``FusionScheduler`` dispatch through.  ``impl`` selects the MapReduce
+    simulator backend (see ``fused_qn_call``); the DAG route has a single
+    implementation and ignores it."""
     kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
               replications=replications, seed=seed)
     if kind == DAG:
@@ -185,7 +193,7 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
                               samples=samples, **kw)
     ms, rs = samples if samples is not None else (None, None)
     return fused_qn_call(profs, think_ms, h_users, slots,
-                         m_samples=ms, r_samples=rs, **kw)
+                         m_samples=ms, r_samples=rs, impl=impl, **kw)
 
 
 class BatchedQNEvaluator:
@@ -209,7 +217,9 @@ class BatchedQNEvaluator:
     def __init__(self, min_jobs: int = 40, warmup_jobs: int = 8,
                  replications: int = 2, seed: int = 0,
                  cache: Optional[dict] = None,
-                 samples: Optional[Dict] = None):
+                 samples: Optional[Dict] = None,
+                 impl: Optional[str] = None):
+        self.impl = impl
         self.min_jobs = min_jobs
         self.warmup_jobs = warmup_jobs
         self.replications = replications
@@ -276,7 +286,7 @@ class BatchedQNEvaluator:
                 [int(items[i][2]) * items[i][1].slots for i in idxs],
                 min_jobs=self.min_jobs, warmup_jobs=self.warmup_jobs,
                 seed=self.seed, replications=self.replications,
-                samples=smp)
+                samples=smp, impl=self.impl)
             for i, t in zip(idxs, ts):
                 self.cache[keys[i]] = float(t)
             with self._counter_lock:
@@ -293,12 +303,13 @@ def make_batched_qn_evaluator(min_jobs: int = 40, warmup_jobs: int = 8,
                               replications: int = 2, seed: int = 0,
                               cache: Optional[dict] = None,
                               samples: Optional[Dict] = None,
+                              impl: Optional[str] = None,
                               ) -> BatchedQNEvaluator:
     """Batched counterpart of ``make_qn_evaluator`` — same cache keys, same
     per-point numbers for the same seed, but whole frontiers per dispatch."""
     return BatchedQNEvaluator(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
                               replications=replications, seed=seed,
-                              cache=cache, samples=samples)
+                              cache=cache, samples=samples, impl=impl)
 
 
 def make_detailed_evaluator(spec_by_class: Dict[str, "object"],

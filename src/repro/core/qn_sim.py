@@ -23,6 +23,7 @@ against the detailed trace-replay simulator in ``cluster_sim.py``).
 """
 from __future__ import annotations
 
+import os
 import threading
 from dataclasses import dataclass
 from functools import partial
@@ -245,6 +246,42 @@ def _sim_batch_jit(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
 
 
 # ---------------------------------------------------------------------------
+# Batch-simulator implementation switch.  ``impl="jnp"`` is the lax.scan
+# oracle above; ``impl="pallas"`` dispatches the SAME padded batch to the
+# fused Pallas event-step kernel (repro.kernels.qn_event), whose contract
+# is bit-exact parity in interpret mode (tests/test_qn_event_kernel.py).
+# The process default comes from $REPRO_QN_IMPL so racing, coordination
+# and windowed planning switch transparently; ``set_default_impl`` flips
+# it at runtime (dispatch accounting is impl-independent by construction).
+# ---------------------------------------------------------------------------
+
+QN_IMPLS = ("jnp", "pallas")
+_DEFAULT_IMPL = os.environ.get("REPRO_QN_IMPL", "jnp")
+
+
+def set_default_impl(impl: str) -> None:
+    """Select the batch simulator backend for calls that don't pass one."""
+    global _DEFAULT_IMPL
+    if impl not in QN_IMPLS:
+        raise ValueError(f"impl must be one of {QN_IMPLS}, got {impl!r}")
+    _DEFAULT_IMPL = impl
+
+
+def default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _batch_sim_fn(impl):
+    impl = _DEFAULT_IMPL if impl is None else impl
+    if impl == "jnp":
+        return _sim_batch_jit
+    if impl == "pallas":
+        from repro.kernels.qn_event import ops as qn_event_ops
+        return qn_event_ops.sim_batch
+    raise ValueError(f"impl must be one of {QN_IMPLS}, got {impl!r}")
+
+
+# ---------------------------------------------------------------------------
 # Device-dispatch accounting (benchmarks/batched_qn.py measures the batched
 # path's dispatch reduction against the scalar path with these).  Beyond raw
 # dispatches the counters track vmap lanes and simulated events — including
@@ -391,7 +428,8 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
                         h_users: int, slots, min_jobs: int = 40,
                         warmup_jobs: int = 10, seed: int = 0,
                         replications: int = 2,
-                        m_samples=None, r_samples=None) -> np.ndarray:
+                        m_samples=None, r_samples=None,
+                        impl: str = None) -> np.ndarray:
     """Batched ``response_time``: one fused device dispatch for a whole
     candidate sweep.
 
@@ -409,9 +447,15 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     When ``m_samples``/``r_samples`` are given the whole batch runs in JMT
     replayer mode with the shared empirical duration lists.
 
+    ``impl`` selects the batch simulator backend (``"jnp"`` — the lax.scan
+    oracle — or ``"pallas"`` — the fused event-step kernel, bit-exact in
+    interpret mode); ``None`` uses the process default (``default_impl``).
+    Dispatch/lane accounting is identical for every impl.
+
     Returns a float64 array of shape (C,) of mean response times [ms]
     (``inf`` where no replication completed a job).
     """
+    sim_fn = _batch_sim_fn(impl)
     shape = np.broadcast_shapes(*(np.shape(np.asarray(x)) for x in
                                   (n_map, n_reduce, m_avg, r_avg,
                                    think_ms, slots)))
@@ -464,7 +508,7 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
         events_useful=int(n_ev[:C].sum()) * R)
-    mean, cnt = _sim_batch_jit(
+    mean, cnt = sim_fn(
         jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
         jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
         jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),

@@ -1,4 +1,7 @@
-"""jit'd public wrapper for the batched-AMVA kernel."""
+"""jit'd public wrappers for the batched-AMVA kernels (interpret on CPU,
+native Pallas on TPU).  ``ps_fixed_point`` backs ``evaluators.
+amva_frontier`` — the one-launch fast tier of the optimizer; ``mva_response``
+is the degenerate-case exact-MVA oracle at kernel speed."""
 from __future__ import annotations
 
 from functools import partial
@@ -16,3 +19,9 @@ def _on_tpu() -> bool:
 def ps_fixed_point(a_over_c, b, think, h_users, iters: int = kernel.PS_ITERS):
     return kernel.amva_fwd(a_over_c, b, think, h_users, iters=iters,
                            interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("h_users",))
+def mva_response(demand, think, h_users: int):
+    return kernel.mva_fwd(demand, think, h_users=h_users,
+                          interpret=not _on_tpu())

@@ -1,9 +1,14 @@
-"""Pure-jnp oracle: the batched PS fixed point from the core module."""
+"""Pure-jnp oracles: the batched PS fixed point and exact MVA recursion
+from the core module (the parity references for kernel.py)."""
 from __future__ import annotations
 
 
-from repro.core.mva import ps_response_batch
+from repro.core.mva import mva_response_batch, ps_response_batch
 
 
 def ps_fixed_point(a_over_c, b, think, h_users):
     return ps_response_batch(a_over_c, b, think, h_users)
+
+
+def mva_response(demand, think, h_users: int):
+    return mva_response_batch(demand, think, h_users)

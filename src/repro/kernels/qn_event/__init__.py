@@ -1,0 +1,5 @@
+"""Pallas QN event-step kernel (see docs/kernels.md).
+
+kernel.py — Pallas program + RNG-stream precompute; ops.py — jit'd public
+entry (``sim_batch``); ref.py — the ``lax.scan`` bit-parity oracle.
+"""

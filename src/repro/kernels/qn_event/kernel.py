@@ -1,0 +1,308 @@
+"""Batched QN event-step as a Pallas kernel (the repo's hottest loop).
+
+``qn_sim`` simulates the paper's closed fork-join queueing network with an
+event-driven ``lax.scan``: every optimizer axis — catalog racing, dual-price
+coordination, 24-window day plans — multiplies calls into that scan, so the
+per-event step (slot selection + clock advance + accumulator update) is the
+single biggest raw-speed lever in the repo (ROADMAP item 2).
+
+This kernel fuses the whole event loop for a *block of lanes* (lane =
+candidate x replication) into one Pallas program: the per-lane state
+(slot clocks, user phases, accumulators) lives in VMEM/registers across all
+``n_events`` steps — no HBM round trips between events — and every step's
+masked selection runs vectorized across the lane block.
+
+Bit-parity strategy
+-------------------
+The ``lax.scan`` path (``qn_sim._sim_batch_jit``) is the ORACLE and the
+kernel must match it bit for bit in interpret mode.  Two observations make
+that tractable:
+
+  * Every random draw of the oracle is a pure function of ``(key, i)`` —
+    the event index — never of simulation state (the *mean* is selected by
+    state, the unit-exponential draw is not).  So the streams (unit
+    service/think exponentials, or replay sample gathers) are precomputed
+    OUTSIDE the kernel with exactly the oracle's calls (``fold_in``/
+    ``exponential``/``randint`` in the same order, same fold offsets) and
+    passed in as ``(lanes, n_events)`` tables; the kernel itself is
+    RNG-free.
+  * The draw-consuming arithmetic (``now + e*mean``, ``t_slot +
+    e*think``) keeps the oracle's exact op structure IN-KERNEL — XLA
+    contracts ``add(x, mul(a, b))`` chains into FMAs inside loop bodies,
+    so hoisting the multiply out of the loop would round differently by
+    1 ulp.  Everything else in the step is f32 adds/compares/min/argmin/
+    where — nothing else contractible — so the elementwise translation of
+    the oracle step (scalar-per-lane -> lane-vectorized) is bitwise exact.
+
+State updates use gather-free one-hot ``where`` masks (TPU-friendly; the
+oracle's ``.at[u].set`` on a scalar lane places exactly one element, the
+one-hot mask places the same element with the same value).
+
+Degenerate lanes are honored exactly like the oracle: a pure-padding lane
+(``n_events_active == 0``) never steps and reports ``resp_cnt == 0``; a
+single-slot lane serializes through ``slot_enabled``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# plain Python float (not a jnp constant: Pallas kernels may not capture
+# array constants); weak-typed to the oracle's exact f32 1e30 in every op
+INF = 1e30
+LANE_BLOCK = 8          # lanes per grid step (f32 sublane count on TPU)
+
+
+# ---------------------------------------------------------------------------
+# RNG streams — bit-identical to the oracle's in-scan draws
+# ---------------------------------------------------------------------------
+
+def event_streams(m_avg, r_avg, think_ms, seed, n_events_active, *,
+                  h_users: int, n_events: int,
+                  m_samples=None, r_samples=None):
+    """Per-lane random tables: initial think clocks ``(H,)`` plus per-event
+    service and think draws ``(E,)``.
+
+    Must mirror ``qn_sim._init_state`` / ``qn_sim._make_step`` exactly:
+      * init:     ``k0, _ = split(key);  exponential(k0, (H,)) * think_ms``
+        (outside the oracle's scan, so the multiply is safe out here);
+      * event i:  ``key_i = fold_in(key, i)`` drives ONE unit exponential
+        — returned UNSCALED (the ``e * mean`` multiply must stay in-kernel
+        next to its consuming add, see module docstring) — or, in replay
+        mode, two ``randint`` index draws into the shared sample lists
+        (replay values are used verbatim: no multiply to preserve);
+      * think:    ``kq = fold_in(key, i + n_events_active)``, also unit
+        (the logical budget is the fold offset — that is what makes a
+        padded lane reproduce its scalar run).
+    """
+    key = jax.random.key(seed)
+    k0, _ = jax.random.split(key)
+    think0 = jax.random.exponential(k0, (h_users,)) * think_ms
+    idx = jnp.arange(n_events)
+
+    def service(i):
+        key_i = jax.random.fold_in(key, i)
+        if m_samples is not None:
+            idx_m = jax.random.randint(key_i, (), 0, m_samples.shape[0])
+            idx_r = jax.random.randint(key_i, (), 0, r_samples.shape[0])
+            return m_samples[idx_m], r_samples[idx_r]
+        e = jax.random.exponential(key_i)
+        return e, e
+
+    def think(i):
+        kq = jax.random.fold_in(key, i + n_events_active)
+        return jax.random.exponential(kq)
+
+    st_m, st_r = jax.vmap(service)(idx)
+    return think0, st_m, st_r, jax.vmap(think)(idx)
+
+
+# ---------------------------------------------------------------------------
+# kernel body
+# ---------------------------------------------------------------------------
+
+def _iota(shape):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+
+
+def _pick(vals, idx):
+    """``vals[l, idx[l]]`` per lane, gather-free (one-hot mask + sum).
+    Exact: one element survives, the rest contribute literal zeros."""
+    mask = _iota(vals.shape) == idx[:, None]
+    return jnp.sum(jnp.where(mask, vals, jnp.zeros_like(vals)), axis=1)
+
+
+def _place(vals, idx, new):
+    """``vals.at[l, idx[l]].set(new[l])`` per lane via one-hot ``where``."""
+    mask = _iota(vals.shape) == idx[:, None]
+    return jnp.where(mask, new[:, None], vals)
+
+
+def _event_kernel(nm_ref, nr_ref, cap_ref, nea_ref, ma_ref, ra_ref, tm_ref,
+                  think0_ref, stm_ref, str_ref, td_ref, sum_ref, cnt_ref, *,
+                  h_users: int, max_slots: int, n_events: int,
+                  warmup_jobs: int, replay: bool):
+    L = nm_ref.shape[0]
+    nm = nm_ref[...]
+    nr = nr_ref[...]
+    cap = cap_ref[...]
+    nea = nea_ref[...]
+    ma = ma_ref[...]
+    ra = ra_ref[...]
+    tm = tm_ref[...]
+    st_m = stm_ref[...]                       # (L, E) draw tables
+    st_r = str_ref[...]
+    td = td_ref[...]
+    slot_enabled = _iota((L, max_slots)) < cap[:, None]
+
+    def step(i, s):
+        (now, slot_end, slot_user, think_end, phase, pending, inflight,
+         arrival, job_start, resp_sum, resp_cnt, done_jobs) = s
+        free_mask = (slot_user < 0) & slot_enabled
+        b_dispatch = jnp.any(free_mask, axis=1) & jnp.any(pending > 0,
+                                                          axis=1)
+
+        # ------------- dispatch one task (reduce priority, FIFO) ----------
+        red_key = jnp.where((pending > 0) & (phase == 2), arrival, INF)
+        map_key = jnp.where((pending > 0) & (phase == 1), arrival, INF)
+        has_red = jnp.min(red_key, axis=1) < INF
+        u = jnp.where(has_red, jnp.argmin(red_key, axis=1),
+                      jnp.argmin(map_key, axis=1)).astype(jnp.int32)
+        stm_i = jax.lax.dynamic_slice_in_dim(st_m, i, 1, 1)[:, 0]
+        str_i = jax.lax.dynamic_slice_in_dim(st_r, i, 1, 1)[:, 0]
+        if replay:
+            st = jnp.where(_pick(phase, u) == 1, stm_i, str_i)
+        else:
+            # mirror the oracle's op order (select mean, then multiply the
+            # unit draw IN the loop body — FMA-contraction parity)
+            mean = jnp.where(_pick(phase, u) == 1, ma, ra)
+            st = stm_i * mean
+        slot = jnp.argmax(free_mask, axis=1).astype(jnp.int32)
+        d_slot_end = _place(slot_end, slot, now + st)
+        d_slot_user = _place(slot_user, slot, u)
+        d_pending = _place(pending, u, _pick(pending, u) - 1)
+        d_inflight = _place(inflight, u, _pick(inflight, u) + 1)
+
+        # ------------- or advance time ------------------------------------
+        t_slot = jnp.min(slot_end, axis=1)
+        t_think = jnp.min(think_end, axis=1)
+        b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
+        b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
+        active = i < nea                       # padded tail: no-op steps
+        b_dispatch &= active
+        b_complete &= active
+        b_think &= active
+
+        # completion
+        cslot = jnp.argmin(slot_end, axis=1).astype(jnp.int32)
+        cu = _pick(slot_user, cslot)
+        infl_cu = _pick(inflight, cu) - 1
+        stage_done = (_pick(pending, cu) == 0) & (infl_cu == 0)
+        was_map = _pick(phase, cu) == 1
+        c_inflight = _place(inflight, cu, infl_cu)
+        c_phase = _place(phase, cu, jnp.where(
+            stage_done, jnp.where(was_map, 2, 0), _pick(phase, cu)))
+        c_pending = _place(pending, cu, jnp.where(
+            stage_done & was_map, nr, _pick(pending, cu)))
+        job_done = stage_done & (~was_map)
+        arr_cu = jnp.where(stage_done & was_map, t_slot,
+                           _pick(arrival, cu))
+        c_arrival = _place(arrival, cu, jnp.where(job_done, INF, arr_cu))
+        resp = t_slot - _pick(job_start, cu)
+        td_i = jax.lax.dynamic_slice_in_dim(td, i, 1, 1)[:, 0]
+        new_think = t_slot + td_i * tm        # oracle: t_slot + e*think_ms
+        c_think = _place(think_end, cu, jnp.where(
+            job_done, new_think, _pick(think_end, cu)))
+        counted = job_done & (done_jobs >= warmup_jobs)
+        c_resp_sum = resp_sum + jnp.where(counted, resp, 0.0)
+        c_resp_cnt = resp_cnt + jnp.where(counted, 1.0, 0.0)
+        c_done = done_jobs + jnp.where(job_done, 1, 0)
+        c_slot_end = _place(slot_end, cslot, jnp.full((L,), INF))
+        c_slot_user = _place(slot_user, cslot,
+                             jnp.full((L,), -1, jnp.int32))
+
+        # think end -> submit job (fork maps)
+        tu = jnp.argmin(think_end, axis=1).astype(jnp.int32)
+        t_phase = _place(phase, tu, jnp.ones((L,), jnp.int32))
+        t_pending = _place(pending, tu, nm)
+        t_arrival = _place(arrival, tu, t_think)
+        t_jobstart = _place(job_start, tu, t_think)
+        t_think_end = _place(think_end, tu, jnp.full((L,), INF))
+
+        def sel(cur, d, c, t):
+            bd, bc, bt = b_dispatch, b_complete, b_think
+            if cur.ndim == 2:
+                bd, bc, bt = bd[:, None], bc[:, None], bt[:, None]
+            return jnp.where(bd, d, jnp.where(bc, c, jnp.where(bt, t, cur)))
+
+        return (sel(now, now, t_slot, t_think),
+                sel(slot_end, d_slot_end, c_slot_end, slot_end),
+                sel(slot_user, d_slot_user, c_slot_user, slot_user),
+                sel(think_end, think_end, c_think, t_think_end),
+                sel(phase, phase, c_phase, t_phase),
+                sel(pending, d_pending, c_pending, t_pending),
+                sel(inflight, d_inflight, c_inflight, inflight),
+                sel(arrival, arrival, c_arrival, t_arrival),
+                sel(job_start, job_start, job_start, t_jobstart),
+                sel(resp_sum, resp_sum, c_resp_sum, resp_sum),
+                sel(resp_cnt, resp_cnt, c_resp_cnt, resp_cnt),
+                sel(done_jobs, done_jobs, c_done, done_jobs))
+
+    init = (jnp.zeros((L,), jnp.float32),                       # now
+            jnp.full((L, max_slots), INF),                      # slot_end
+            jnp.full((L, max_slots), -1, jnp.int32),            # slot_user
+            think0_ref[...],                                    # think_end
+            jnp.zeros((L, h_users), jnp.int32),                 # phase
+            jnp.zeros((L, h_users), jnp.int32),                 # pending
+            jnp.zeros((L, h_users), jnp.int32),                 # inflight
+            jnp.full((L, h_users), INF),                        # arrival
+            jnp.zeros((L, h_users), jnp.float32),               # job_start
+            jnp.zeros((L,), jnp.float32),                       # resp_sum
+            jnp.zeros((L,), jnp.float32),                       # resp_cnt
+            jnp.zeros((L,), jnp.int32))                         # done_jobs
+    out = jax.lax.fori_loop(0, n_events, step, init)
+    sum_ref[...] = out[9]
+    cnt_ref[...] = out[10]
+
+
+# ---------------------------------------------------------------------------
+# host-side wrapper
+# ---------------------------------------------------------------------------
+
+def qn_event_fwd(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+                 n_events_active, m_samples=None, r_samples=None, *,
+                 h_users: int, max_slots: int, n_events: int,
+                 warmup_jobs: int, lane_block: int = LANE_BLOCK,
+                 interpret: bool = True):
+    """Drop-in for ``qn_sim._sim_batch_jit``: all per-lane parameters are
+    ``(B,)`` arrays, replay sample lists (when given) are shared across the
+    batch.  Returns ``(mean_resp, resp_cnt)`` per lane, bit-identical (in
+    interpret mode) to the ``lax.scan`` oracle."""
+    B = n_map.shape[0]
+    L = min(lane_block, B)
+
+    streams = functools.partial(event_streams, h_users=h_users,
+                                n_events=n_events, m_samples=m_samples,
+                                r_samples=r_samples)
+    think0, st_m, st_r, td = jax.vmap(streams)(
+        m_avg, r_avg, think_ms, seed, n_events_active)
+
+    m_avg = jnp.asarray(m_avg, jnp.float32)
+    r_avg = jnp.asarray(r_avg, jnp.float32)
+    think_ms = jnp.asarray(think_ms, jnp.float32)
+    pad = (-B) % L
+    if pad:
+        # pure-padding lanes: zero active events -> untouched state,
+        # resp_cnt == 0; dropped below
+        p1 = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        n_map, n_reduce, slots_cap, n_events_active, m_avg, r_avg, \
+            think_ms = map(p1, (n_map, n_reduce, slots_cap,
+                                n_events_active, m_avg, r_avg, think_ms))
+        think0, st_m, st_r, td = map(p1, (think0, st_m, st_r, td))
+        slots_cap = slots_cap.at[B:].set(1)    # keep slot mask well-formed
+
+    grid = ((B + pad) // L,)
+    vec = pl.BlockSpec((L,), lambda i: (i,))
+    tab = pl.BlockSpec((L, n_events), lambda i: (i, 0))
+    kernel = functools.partial(
+        _event_kernel, h_users=h_users, max_slots=max_slots,
+        n_events=n_events, warmup_jobs=warmup_jobs,
+        replay=m_samples is not None)
+    resp_sum, resp_cnt = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, vec, vec, vec,
+                  pl.BlockSpec((L, h_users), lambda i: (i, 0)),
+                  tab, tab, tab],
+        out_specs=[vec, vec],
+        out_shape=[jax.ShapeDtypeStruct((B + pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((B + pad,), jnp.float32)],
+        interpret=interpret,
+    )(n_map.astype(jnp.int32), n_reduce.astype(jnp.int32),
+      slots_cap.astype(jnp.int32), n_events_active.astype(jnp.int32),
+      m_avg, r_avg, think_ms, think0, st_m, st_r, td)
+    resp_sum, resp_cnt = resp_sum[:B], resp_cnt[:B]
+    return resp_sum / jnp.maximum(resp_cnt, 1.0), resp_cnt

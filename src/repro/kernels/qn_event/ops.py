@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the batched QN event-step kernel.
+
+``sim_batch`` is signature-compatible with ``qn_sim._sim_batch_jit`` (the
+``lax.scan`` oracle) and is what ``qn_sim.response_time_batch`` dispatches
+to under ``impl="pallas"``.  Interpret mode on CPU (the tier-1 CI path,
+bit-exact vs the oracle), native Pallas on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.qn_event import kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("h_users", "max_slots", "n_events",
+                                   "warmup_jobs"))
+def sim_batch(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+              n_events_active, m_samples, r_samples, *,
+              h_users, max_slots, n_events, warmup_jobs):
+    return kernel.qn_event_fwd(
+        n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+        n_events_active, m_samples, r_samples,
+        h_users=h_users, max_slots=max_slots, n_events=n_events,
+        warmup_jobs=warmup_jobs, interpret=not _on_tpu())

@@ -1,0 +1,20 @@
+"""Oracle: the masked ``lax.scan`` event simulator from the core module.
+
+``qn_sim._sim_batch_jit`` is the bit-parity reference for the Pallas
+event-step kernel — the parity contract (tests/test_qn_event_kernel.py)
+is EXACT equality in interpret mode, tolerance-bounded on compiled
+accelerator backends.
+"""
+from __future__ import annotations
+
+from repro.core.qn_sim import _sim_batch_jit
+
+
+def sim_batch(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+              n_events_active, m_samples, r_samples, *,
+              h_users, max_slots, n_events, warmup_jobs):
+    return _sim_batch_jit(
+        n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap, seed,
+        n_events_active, m_samples, r_samples,
+        h_users=h_users, max_slots=max_slots, n_events=n_events,
+        warmup_jobs=warmup_jobs)

@@ -1,0 +1,188 @@
+"""Measured QN/AMVA kernel record — the simulator-tier dry run.
+
+The model dry run (``launch/dryrun.py`` -> ``results/dryrun.json``) records
+compiled cost terms per (arch x shape x mesh) cell.  This module does the
+same for the *optimizer's* hot kernels — the batched QN event simulator
+(``qn_sim._sim_batch_jit`` vs the fused Pallas event-step kernel) and the
+batched AMVA fixed point (jnp scan vs the tiled Pallas kernel): each cell
+is lowered + compiled for ``compiled.cost_analysis()`` FLOPs/bytes, then
+timed for measured throughput (events/s for the simulator, candidates/s
+for AMVA), with a bit-parity check of the two implementations riding
+along.  ``benchmarks/roofline_report.py`` regenerates this record in CI
+(CPU interpret mode) so the perf trajectory and the parity contract are
+tracked per commit, and ``launch/roofline.py`` turns it into FLOP/byte
+roofline rows for the TPU deploy target.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import List, Optional
+
+import numpy as np
+
+DRYRUN_QN = "results/dryrun_qn.json"
+
+
+def _cost(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return {"flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "transcendentals": float(cost.get("transcendentals", 0.0))}
+    except Exception as e:  # pragma: no cover - backend dependent
+        return {"error": str(e)}
+
+
+def _bench(fn, args, kwargs, reps: int):
+    import jax
+    out = fn(*args, **kwargs)          # compile + warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def _qn_batch(*, batch: int, n_map: int, n_reduce: int, m_avg: float,
+              r_avg: float, think_ms: float, h_users: int, min_jobs: int,
+              warmup_jobs: int, seed: int = 0):
+    """One fused-batch argument set, built exactly the way
+    ``qn_sim.response_time_batch`` marshals a nu frontier (pow2 batch,
+    per-lane budgets + seeds), so the measured cell IS the production
+    dispatch shape."""
+    import jax.numpy as jnp
+
+    from repro.core import qn_sim
+
+    nus = np.arange(1, batch + 1, dtype=np.int64)
+    n_ev = qn_sim.padded_event_budget(n_map, n_reduce, min_jobs=min_jobs,
+                                      warmup_jobs=warmup_jobs)
+    full = lambda v, dt: jnp.full((batch,), v, dt)
+    args = (full(n_map, jnp.int32), full(n_reduce, jnp.int32),
+            full(m_avg, jnp.float32), full(r_avg, jnp.float32),
+            full(think_ms, jnp.float32), jnp.asarray(nus, jnp.int32),
+            jnp.asarray(seed + 1000 * np.arange(batch), jnp.int32),
+            full(n_ev, jnp.int32), None, None)
+    statics = dict(h_users=h_users, max_slots=qn_sim._pow2(int(nus.max())),
+                   n_events=n_ev, warmup_jobs=warmup_jobs)
+    return args, statics
+
+
+def _qn_cell(cell: dict, reps: int) -> List[dict]:
+    import jax.numpy as jnp
+
+    from repro.core import qn_sim
+    from repro.kernels.qn_event import ops as qn_event_ops
+
+    args, statics = _qn_batch(**cell)
+    lanes = cell["batch"]
+    events = statics["n_events"] * lanes
+    recs, outs = [], {}
+    for impl, fn in (("jnp", qn_sim._sim_batch_jit),
+                     ("pallas", qn_event_ops.sim_batch)):
+        rec = {"cell": "qn_event", "impl": impl, **{
+            k: cell[k] for k in ("batch", "n_map", "n_reduce", "h_users",
+                                 "min_jobs", "warmup_jobs")},
+            "n_events": statics["n_events"], "max_slots": statics["max_slots"],
+            "lanes": lanes, "events_total": events}
+        try:
+            compiled = fn.lower(*args, **statics).compile()
+            rec["cost_analysis"] = _cost(compiled)
+        except Exception as e:  # pragma: no cover - backend dependent
+            rec["cost_analysis"] = {"error": str(e)}
+        wall, out = _bench(fn, args, statics, reps)
+        outs[impl] = out
+        rec["wall_s"] = wall
+        rec["events_per_s"] = events / wall
+        recs.append(rec)
+    bit = bool(jnp.array_equal(outs["jnp"][0], outs["pallas"][0])
+               and jnp.array_equal(outs["jnp"][1], outs["pallas"][1]))
+    for r in recs:
+        r["parity_bit_exact"] = bit
+    return recs
+
+
+def _amva_cell(n: int, h_users: int, reps: int, seed: int = 0) -> List[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import mva
+    from repro.kernels.amva import ops as amva_ops
+
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(1.0, 50.0, n), jnp.float32)
+    b = jnp.asarray(rng.uniform(0.1, 5.0, n), jnp.float32)
+    z = jnp.asarray(rng.uniform(1.0, 100.0, n), jnp.float32)
+    h = jnp.full((n,), float(h_users), jnp.float32)
+    recs, outs = [], {}
+    for impl, fn in (("jnp", jax.jit(mva.ps_response_batch)),
+                     ("pallas", amva_ops.ps_fixed_point)):
+        rec = {"cell": "amva_ps", "impl": impl, "batch": n,
+               "h_users": h_users, "iters": mva.PS_ITERS}
+        try:
+            compiled = fn.lower(a, b, z, h).compile()
+            rec["cost_analysis"] = _cost(compiled)
+        except Exception as e:  # pragma: no cover - backend dependent
+            rec["cost_analysis"] = {"error": str(e)}
+        wall, out = _bench(fn, (a, b, z, h), {}, reps)
+        outs[impl] = out
+        rec["wall_s"] = wall
+        rec["candidates_per_s"] = n / wall
+        recs.append(rec)
+    bit = bool(jnp.array_equal(outs["jnp"], outs["pallas"]))
+    for r in recs:
+        r["parity_bit_exact"] = bit
+    return recs
+
+
+def record_qn_cells(out: Optional[str] = DRYRUN_QN,
+                    quick: bool = False) -> List[dict]:
+    """Measure every cell; write the JSON record to ``out`` (skipped when
+    None) and return it.  ``quick`` shrinks batch/budget for CI smoke."""
+    import jax
+
+    if quick:
+        qn_cells = [dict(batch=8, n_map=8, n_reduce=2, m_avg=40.0,
+                         r_avg=60.0, think_ms=1000.0, h_users=3,
+                         min_jobs=8, warmup_jobs=2)]
+        amva_cells = [(1024, 10)]
+        reps = 2
+    else:
+        qn_cells = [
+            dict(batch=16, n_map=16, n_reduce=4, m_avg=40.0, r_avg=60.0,
+                 think_ms=1000.0, h_users=5, min_jobs=16, warmup_jobs=4),
+            dict(batch=32, n_map=64, n_reduce=16, m_avg=30.0, r_avg=80.0,
+                 think_ms=10000.0, h_users=10, min_jobs=24, warmup_jobs=6),
+        ]
+        amva_cells = [(4096, 10), (65536, 20)]
+        reps = 3
+    recs: List[dict] = [{"cell": "meta", "backend": jax.default_backend(),
+                         "quick": quick}]
+    for cell in qn_cells:
+        recs.extend(_qn_cell(cell, reps))
+    for n, h in amva_cells:
+        recs.extend(_amva_cell(n, h, reps))
+    if out is not None:
+        p = Path(out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(recs, indent=1))
+    return recs
+
+
+def main():  # pragma: no cover - CLI convenience
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=DRYRUN_QN)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    recs = record_qn_cells(out=args.out, quick=args.quick)
+    print(f"{len(recs) - 1} kernel cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

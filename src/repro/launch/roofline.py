@@ -181,6 +181,72 @@ def _suggestion(bottleneck: str, useful: float, rec: dict) -> str:
     return "compute-bound; near roofline for this shape"
 
 
+@dataclass
+class KernelRooflineRow:
+    """Roofline view of one measured optimizer-kernel cell from the QN
+    record (``launch/qn_record.py``).  ``throughput`` is events/s for the
+    simulator cells and candidates/s for AMVA; ``peak_fraction`` is the
+    achieved-FLOPS share of the v5e peak the cell would need on the deploy
+    target (CPU-measured cells are far below it — the column tracks the
+    headroom the Pallas path unlocks, not CPU efficiency)."""
+    cell: str
+    impl: str
+    batch: int
+    wall_s: float
+    throughput: float
+    unit: str
+    flops: float
+    bytes_accessed: float
+    flop_per_byte: float
+    achieved_flops: float
+    peak_fraction: float
+    parity_bit_exact: Optional[bool]
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def analyze_kernel_record(rec: dict) -> Optional[KernelRooflineRow]:
+    if rec.get("cell") not in ("qn_event", "amva_ps"):
+        return None
+    ca = rec.get("cost_analysis", {})
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes_accessed", 0.0))
+    wall = float(rec["wall_s"])
+    if rec["cell"] == "qn_event":
+        throughput, unit = rec["events_per_s"], "events/s"
+    else:
+        throughput, unit = rec["candidates_per_s"], "candidates/s"
+    achieved = flops / wall if wall > 0 else 0.0
+    return KernelRooflineRow(
+        cell=rec["cell"], impl=rec["impl"], batch=int(rec["batch"]),
+        wall_s=wall, throughput=float(throughput), unit=unit,
+        flops=flops, bytes_accessed=nbytes,
+        flop_per_byte=flops / nbytes if nbytes > 0 else 0.0,
+        achieved_flops=achieved, peak_fraction=achieved / PEAK_FLOPS,
+        parity_bit_exact=rec.get("parity_bit_exact"))
+
+
+def analyze_qn_file(path: str = "results/dryrun_qn.json",
+                    ) -> List[KernelRooflineRow]:
+    recs = json.loads(open(path).read())
+    rows = [analyze_kernel_record(r) for r in recs]
+    return [r for r in rows if r is not None]
+
+
+def format_kernel_table(rows: List[KernelRooflineRow]) -> str:
+    hdr = (f"{'cell':10s} {'impl':7s} {'batch':>6s} {'wall(ms)':>9s} "
+           f"{'throughput':>12s} {'unit':12s} {'F/B':>6s} {'parity':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r.cell, r.batch, r.impl)):
+        parity = "-" if r.parity_bit_exact is None else str(r.parity_bit_exact)
+        lines.append(
+            f"{r.cell:10s} {r.impl:7s} {r.batch:6d} {r.wall_s*1e3:9.2f} "
+            f"{r.throughput:12.3e} {r.unit:12s} {r.flop_per_byte:6.2f} "
+            f"{parity:>7s}")
+    return "\n".join(lines)
+
+
 def analyze_file(path: str = "results/dryrun.json") -> List[RooflineRow]:
     recs = json.loads(open(path).read())
     rows = [analyze_record(r) for r in recs]

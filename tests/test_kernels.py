@@ -96,14 +96,58 @@ def test_ssd_kernel_vs_ref(case, dtype):
                                atol=tol, rtol=tol)
 
 
-@pytest.mark.parametrize("n", [7, 128, 1000, 4096])
-def test_amva_kernel_vs_ref(n):
+def _amva_batch(n):
     a = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, n), (n,))) * 1e4
     b = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, n + 1), (n,))) * 1e3
     z = jnp.full((n,), 1e4)
     h = jnp.round(jnp.abs(jax.random.normal(
         jax.random.fold_in(KEY, n + 2), (n,))) * 10 + 1)
+    return a, b, z, h
+
+
+# sizes straddle the (8, 128) tile: sub-tile, exact multiples, ragged tails
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 1024, 4096, 4097])
+def test_amva_kernel_vs_ref(n):
+    a, b, z, h = _amva_batch(n)
     ref = amva_ref.ps_fixed_point(a, b, z, h)
-    out = amva_kernel.amva_fwd(a, b, z, h, block=256)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=1e-5, atol=1e-3)
+    out = amva_kernel.amva_fwd(a, b, z, h)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n", [5, 300, 1024])
+@pytest.mark.parametrize("h_users", [1, 4, 25])
+def test_mva_kernel_vs_ref(n, h_users):
+    a, _, z, _ = _amva_batch(n)
+    d = a * 1e-3 + 1.0
+    ref = amva_ref.mva_response(d, z, h_users)
+    out = amva_kernel.mva_fwd(d, z, h_users=h_users)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_amva_ops_jit_wrappers():
+    from repro.kernels.amva import ops as amva_ops
+    a, b, z, h = _amva_batch(200)
+    np.testing.assert_array_equal(
+        np.asarray(amva_ops.ps_fixed_point(a, b, z, h)),
+        np.asarray(amva_ref.ps_fixed_point(a, b, z, h)))
+    np.testing.assert_array_equal(
+        np.asarray(amva_ops.mva_response(a * 1e-3 + 1.0, z, 8)),
+        np.asarray(amva_ref.mva_response(a * 1e-3 + 1.0, z, 8)))
+
+
+def test_amva_fixed_point_converges_monotonically():
+    """The PS iteration T <- a*max(1, hT/(T+z)) + b starts at T0 = a + b,
+    a lower bound of the fixed point, and the map is increasing — so the
+    kernel's iterates must be nondecreasing in the iteration count and the
+    residual must shrink to nothing at the production iteration budget."""
+    a, b, z, h = _amva_batch(512)
+    ts = [np.asarray(amva_kernel.amva_fwd(a, b, z, h, iters=k))
+          for k in (1, 2, 5, 10, 20, 40, 80)]
+    for lo, hi in zip(ts, ts[1:]):
+        # slack = a few f32 ulps at the iterate's own scale
+        assert (hi >= lo - 1e-5 * np.abs(lo) - 1e-3).all()
+    r_early = np.abs(ts[2] - ts[1])             # residual over iters 2..5
+    r_late = np.abs(ts[5] - ts[4])              # residual over iters 20..40
+    assert (r_late <= r_early + 1e-5 * np.abs(ts[5]) + 1e-3).all()
+    rel = np.abs(ts[6] - ts[5]) / np.maximum(np.abs(ts[6]), 1e-9)
+    assert rel.max() < 1e-4                     # converged at 40 iters
