@@ -5,25 +5,81 @@ writes ``results/BENCH_<name>.json`` so the perf trajectory is tracked
 across PRs (compare the files between commits instead of scraping CI
 logs).  ``metrics`` takes any extra structured numbers a benchmark wants
 recorded alongside the headline.
+
+Each BENCH file is stamped with ``provenance`` (git SHA, jax version,
+platform, ``REPRO_QN_IMPL``) so a recorded number is attributable to the
+commit and backend that produced it; when a telemetry tracer is installed
+(``repro.obs.tracing()``), ``emit`` also attaches the current
+metrics-registry snapshot under ``telemetry``.
 """
 from __future__ import annotations
 
 import json
 import os
+import platform as _platform
+import subprocess
 import time
 from pathlib import Path
 from typing import Optional
 
 RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results"))
 
+_PROVENANCE: Optional[dict] = None
+
+
+def provenance() -> dict:
+    """Build stamp for benchmark artifacts (computed once per process).
+    Every field degrades to ``None`` rather than failing — benchmarks must
+    run outside a git checkout or without jax just the same."""
+    global _PROVENANCE
+    if _PROVENANCE is not None:
+        return _PROVENANCE
+    sha = None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        pass
+    jax_version = None
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        pass
+    _PROVENANCE = {
+        "git_sha": sha,
+        "jax": jax_version,
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "qn_impl": os.environ.get("REPRO_QN_IMPL", "jnp"),
+    }
+    return _PROVENANCE
+
+
+def _telemetry_snapshot() -> Optional[dict]:
+    """Metrics-registry snapshot, attached only while a tracer is active
+    (the observability opt-in; cold benchmark runs stay lean)."""
+    try:
+        from repro import obs
+    except Exception:
+        return None
+    if obs.active() is None:
+        return None
+    return obs.registry().snapshot()
+
 
 def emit(name: str, us_per_call: float, derived: str,
          metrics: Optional[dict] = None) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
     payload = {"name": name, "us_per_call": us_per_call, "derived": derived,
-               "unix_time": time.time()}
+               "unix_time": time.time(), "provenance": provenance()}
     if metrics:
         payload["metrics"] = metrics
+    telemetry = _telemetry_snapshot()
+    if telemetry is not None:
+        payload["telemetry"] = telemetry
     save_json(f"BENCH_{name}", payload)
 
 
@@ -33,7 +89,8 @@ def emit_error(name: str, err: Exception) -> None:
     print(f"{name},0.0,{derived}")
     save_json(f"BENCH_{name}", {"name": name, "us_per_call": 0.0,
                                 "derived": derived, "error": True,
-                                "unix_time": time.time()})
+                                "unix_time": time.time(),
+                                "provenance": provenance()})
 
 
 def save_json(name: str, obj) -> Path:

@@ -15,13 +15,24 @@ measurements:
   3. warm-cache resubmission: a fresh service on the spilled cache re-runs
      all eight jobs with ZERO new dispatches (asserted).
 
-Usage: PYTHONPATH=src python -m benchmarks.service_throughput [--quick]
+With ``--trace``, the whole run executes under an installed telemetry
+tracer: the concurrent-service phase is exported as Chrome trace-event
+JSON (``results/TRACE_service_throughput.json``, loadable in Perfetto),
+the export is schema-validated, the span tree is asserted to reach
+kernel-impl depth (``service.run → … → fused_dispatch → kernel:*``), and
+the metrics-registry ``qn.*`` snapshot is asserted bit-equal to
+``qn_sim.sim_stats()`` — the tracing-on/off invariance the telemetry
+plane guarantees.
+
+Usage: PYTHONPATH=src python -m benchmarks.service_throughput
+           [--quick] [--trace]
 """
 from __future__ import annotations
 
 import os
 
 from benchmarks.common import RESULTS_DIR, emit, save_json, timer
+from repro import obs
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import ApplicationClass, JobProfile, Problem, VMType
@@ -52,7 +63,50 @@ def _job_equal(rep_a, rep_b) -> bool:
                for k in rep_a.traces)
 
 
-def run(quick: bool = False):
+def _check_trace(tracer) -> dict:
+    """Validate the traced service run: Chrome schema, kernel-impl span
+    depth under the service root, and registry/sim_stats bit-parity."""
+    trace_path = RESULTS_DIR / "TRACE_service_throughput.json"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    chrome = tracer.save(trace_path)
+    n_events = obs.validate_chrome_trace(chrome)
+
+    kernels = [s for s in tracer.spans if s.name.startswith("kernel:")]
+    assert kernels, "trace never reached kernel-impl depth"
+    # the solo-baseline phase also traces; assert on a kernel span that is
+    # rooted in the SERVICE run specifically
+    chains = {s.sid: tracer.chain(s) for s in kernels}
+    service_kernels = [s for s in kernels if "service.run" in chains[s.sid]]
+    assert service_kernels, \
+        f"no kernel span under service.run (chains: {list(chains.values())})"
+    deepest = max(service_kernels, key=lambda s: s.depth)
+    chain = chains[deepest.sid]
+    assert "fused_dispatch" in chain, \
+        f"kernel span missed the fused-dispatch tier: {chain}"
+
+    reg_qn = obs.registry().snapshot("qn.")
+    stats = qn_sim.sim_stats()
+    mismatch = {k: (reg_qn[f"qn.{k}"], v) for k, v in stats.items()
+                if reg_qn[f"qn.{k}"] != v}
+    assert not mismatch, f"registry/sim_stats divergence: {mismatch}"
+
+    return {"path": str(trace_path), "chrome_events": n_events,
+            "n_spans": len(tracer.spans),
+            "max_depth": tracer.summary()["max_depth"],
+            "deepest_kernel_chain": chain}
+
+
+def run(quick: bool = False, trace: bool = False):
+    if trace:
+        with obs.tracing() as tracer:
+            out = _run(quick)
+            out["trace"] = _check_trace(tracer)
+            save_json("service_throughput", out)
+        return out
+    return _run(quick)
+
+
+def _run(quick: bool = False):
     kw = dict(min_jobs=8 if quick else 25, replications=1 if quick else 2,
               seed=0)
     window = 8
@@ -131,4 +185,4 @@ def run(quick: bool = False):
 
 if __name__ == "__main__":
     import sys
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv, trace="--trace" in sys.argv)

@@ -44,6 +44,8 @@ import numpy as np
 
 from repro.cloud.hosts import PrivateCloud
 from repro.cloud.placement import Placement, demand_cores, pack
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.core.hillclimb import HCTrace, request_id, sweep_requests
 from repro.core.mva import job_response
 from repro.core.pricing import mix_cost, optimal_mix
@@ -54,6 +56,14 @@ from repro.core.problem import (
     VMType,
     solution_cost,
 )
+
+
+# Process-wide dual-price coordination counters (each JointPlan also
+# carries its own per-run price_rounds/probe_rounds tallies).
+_REG = _obs_metrics.registry()
+_PRICE_ROUNDS = _REG.counter("joint.price_rounds")
+_PROBE_ROUNDS = _REG.counter("joint.probe_rounds")
+_FALLBACKS = _REG.counter("joint.fallbacks")
 
 
 def violations(sols: Dict[str, ClassSolution]) -> int:
@@ -216,6 +226,7 @@ def coordinate_requests(problem: Problem, cloud: PrivateCloud,
     sols = dict(base_sols)
     while True:
         plan.price_rounds += 1
+        _PRICE_ROUNDS.inc()
         # -------- choose each class's lane under λ, verifying on demand
         while True:
             choice: Dict[str, ClassSolution] = {}
@@ -262,6 +273,7 @@ def coordinate_requests(problem: Problem, cloud: PrivateCloud,
                 props[name] = next(g)
             while props:
                 plan.probe_rounds += 1
+                _PROBE_ROUNDS.inc()
                 results = yield [(classes[name], gens[name][1], list(nus))
                                  for name, nus in props.items()]
                 nxt: Dict[str, list] = {}
@@ -288,6 +300,7 @@ def coordinate_requests(problem: Problem, cloud: PrivateCloud,
     # -------- escalation exhausted: degrade the most core-efficient fleet
     plan.dual_price = lam
     plan.used_fallback = True
+    _FALLBACKS.inc()
     baseline = truncate_to_fit(problem, base_sols, cloud)
     # pricing that could not shift any lane leaves sols == base_sols —
     # the degraded fleet IS the baseline then, don't truncate it twice
@@ -307,22 +320,31 @@ def coordinate(problem: Problem, cloud: PrivateCloud,
     gen = coordinate_requests(problem, cloud, base_sols, lanes,
                               window=window, max_nu=max_nu, traces=traces)
     results = None
-    while True:
-        try:
-            props = gen.send(results) if results is not None else next(gen)
-        except StopIteration as stop:
-            return stop.value
-        results = {}
-        if hasattr(evaluator, "evaluate_many"):
-            flat = [(cls, vm, int(n)) for cls, vm, nus in props
-                    for n in nus]
-            ts = evaluator.evaluate_many(flat)
-            at = 0
-            for cls, vm, nus in props:
-                results[request_id(cls.name, vm.name)] = \
-                    np.asarray(ts[at:at + len(nus)], float)
-                at += len(nus)
-        else:
-            for cls, vm, nus in props:
-                results[request_id(cls.name, vm.name)] = np.asarray(
-                    [evaluator(cls, vm, int(n)) for n in nus], float)
+    n_round = 0
+    with _obs_trace.span("coordinate", cat="coord",
+                         classes=len(problem.classes)):
+        while True:
+            try:
+                props = gen.send(results) if results is not None \
+                    else next(gen)
+            except StopIteration as stop:
+                return stop.value
+            # Probe-round span wraps only the evaluation; the generator
+            # suspends at its yield outside any span.
+            with _obs_trace.span("coord_round", cat="coord", round=n_round,
+                                 windows=len(props)):
+                results = {}
+                if hasattr(evaluator, "evaluate_many"):
+                    flat = [(cls, vm, int(n)) for cls, vm, nus in props
+                            for n in nus]
+                    ts = evaluator.evaluate_many(flat)
+                    at = 0
+                    for cls, vm, nus in props:
+                        results[request_id(cls.name, vm.name)] = \
+                            np.asarray(ts[at:at + len(nus)], float)
+                        at += len(nus)
+                else:
+                    for cls, vm, nus in props:
+                        results[request_id(cls.name, vm.name)] = np.asarray(
+                            [evaluator(cls, vm, int(n)) for n in nus], float)
+            n_round += 1

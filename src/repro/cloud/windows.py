@@ -41,6 +41,7 @@ from repro.core.evaluators import make_batched_qn_evaluator
 from repro.core.optimizer import DSpace4Cloud, RunReport
 from repro.core.pricing import optimal_day_mix
 from repro.core.problem import Problem
+from repro.obs import trace as _obs_trace
 
 HOURS = 24
 
@@ -145,26 +146,31 @@ def plan_day(problem: Problem, day_h: Dict[str, Sequence[int]], *,
 
     # ---- lockstep rounds: every window's probes share one fused call
     plan = DayPlan(reports=[])
-    while pending:
-        plan.rounds += 1
-        if plan.rounds > max_rounds:
-            raise RuntimeError(f"day plan did not settle in {max_rounds} "
-                               f"rounds ({len(pending)} windows open)")
-        reqs = [(t, r) for t, rs in pending.items() for r in rs]
-        flat = [(r.cls, r.vm, int(nu)) for _, r in reqs for nu in r.nus]
-        ts = evaluator.evaluate_many(flat)
-        results: Dict[int, dict] = {t: {} for t in pending}
-        at = 0
-        for t, r in reqs:
-            results[t][r.rid] = np.asarray(ts[at:at + len(r.nus)])
-            at += len(r.nus)
-        nxt: Dict[int, list] = {}
-        for t in list(pending):
-            try:
-                nxt[t] = gens[t].send(results[t])
-            except StopIteration as stop:
-                reports[t] = stop.value
-        pending = nxt
+    with _obs_trace.span("day_plan", cat="windows", windows=n_windows):
+        while pending:
+            plan.rounds += 1
+            if plan.rounds > max_rounds:
+                raise RuntimeError(
+                    f"day plan did not settle in {max_rounds} "
+                    f"rounds ({len(pending)} windows open)")
+            reqs = [(t, r) for t, rs in pending.items() for r in rs]
+            flat = [(r.cls, r.vm, int(nu)) for _, r in reqs for nu in r.nus]
+            with _obs_trace.span("day_round", cat="windows",
+                                 round=plan.rounds, open=len(pending),
+                                 points=len(flat)):
+                ts = evaluator.evaluate_many(flat)
+            results: Dict[int, dict] = {t: {} for t in pending}
+            at = 0
+            for t, r in reqs:
+                results[t][r.rid] = np.asarray(ts[at:at + len(r.nus)])
+                at += len(r.nus)
+            nxt: Dict[int, list] = {}
+            for t in list(pending):
+                try:
+                    nxt[t] = gens[t].send(results[t])
+                except StopIteration as stop:
+                    reports[t] = stop.value
+            pending = nxt
     plan.reports = reports
 
     # ---- day pricing: reserved contracts across all windows

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import qn_sim
 from repro.core.mva import ps_response, workload_demand
 from repro.core.workload import DagJob, Stage
+from repro.obs import trace as _obs_trace
 
 __all__ = [
     "DagJob", "Stage", "dag_demand", "dag_response_analytic",
@@ -382,7 +383,11 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
         events_useful=int(n_ev[:C].sum()) * R)
-    mean, cnt = _dag_sim_batch_jit(
+    _span = _obs_trace.span("kernel:dag", cat="kernel", lanes=C_pad * R,
+                            candidates=C, scan_len=scan_len,
+                            replay=smp is not None)
+    with _span:
+        mean, cnt = _dag_sim_batch_jit(
         jnp.asarray(rep(nt), jnp.int32), jnp.asarray(rep(ta), jnp.float32),
         jnp.asarray(rep(tk)), jnp.asarray(rep(sl), jnp.int32),
         jnp.asarray(seeds, jnp.int32), jnp.asarray(rep(n_ev), jnp.int32),

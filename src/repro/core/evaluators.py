@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import dag as dag_mod
 from repro.core import qn_sim
 from repro.core.mva import job_response, ps_response_batch, workload_demand
+from repro.obs import trace as _obs_trace
 from repro.core.problem import ApplicationClass, VMType
 from repro.core.workload import (
     DAG,
@@ -188,12 +189,15 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
     implementation and ignores it."""
     kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
               replications=replications, seed=seed)
-    if kind == DAG:
-        return fused_dag_call(profs, think_ms, h_users, slots,
-                              samples=samples, **kw)
-    ms, rs = samples if samples is not None else (None, None)
-    return fused_qn_call(profs, think_ms, h_users, slots,
-                         m_samples=ms, r_samples=rs, impl=impl, **kw)
+    with _obs_trace.span("fused_dispatch", cat="fusion", kind=kind,
+                         points=len(profs), h_users=int(h_users),
+                         replay=samples is not None):
+        if kind == DAG:
+            return fused_dag_call(profs, think_ms, h_users, slots,
+                                  samples=samples, **kw)
+        ms, rs = samples if samples is not None else (None, None)
+        return fused_qn_call(profs, think_ms, h_users, slots,
+                             m_samples=ms, r_samples=rs, impl=impl, **kw)
 
 
 class BatchedQNEvaluator:

@@ -48,6 +48,7 @@ from repro.core.problem import (
     Problem,
     VMType,
 )
+from repro.obs import trace as _obs_trace
 
 # evaluator: (cls, vm, nu) -> predicted response time [ms]
 Evaluator = Callable[[ApplicationClass, VMType, int], float]
@@ -209,12 +210,18 @@ def sweep_class(cls: ApplicationClass, vm: VMType, nu0: int,
     gen = sweep_requests(cls, vm, nu0, window=window, max_nu=max_nu,
                          stall_windows=stall_windows, trace=trace)
     ts = None
+    n_round = 0
     while True:
         try:
             nus = gen.send(ts) if ts is not None else next(gen)
         except StopIteration as stop:
             return stop.value
-        ts = evaluator.evaluate_frontier(cls, vm, nus)
+        # The span wraps only the evaluate (the generator is suspended at
+        # its yield and must not sit inside a span).
+        with _obs_trace.span("sweep_window", cat="search", cls=cls.name,
+                             vm=vm.name, round=n_round, points=len(nus)):
+            ts = evaluator.evaluate_frontier(cls, vm, nus)
+        n_round += 1
 
 
 @dataclass
@@ -355,27 +362,35 @@ def race_class(cls: ApplicationClass, lanes: Sequence[Tuple[VMType, int]],
     gen = race_requests(cls, lanes, window=window, max_nu=max_nu,
                         stall_windows=stall_windows, traces=traces)
     results = None
+    n_round = 0
     while True:
         try:
             props = gen.send(results) if results is not None else next(gen)
         except StopIteration as stop:
             return stop.value
-        results = {}
-        if hasattr(evaluator, "evaluate_many"):
-            flat = [(cls, vm, int(n)) for vm, nus in props for n in nus]
-            ts = evaluator.evaluate_many(flat)
-            at = 0
-            for vm, nus in props:
-                results[vm.name] = np.asarray(ts[at:at + len(nus)], float)
-                at += len(nus)
-        elif hasattr(evaluator, "evaluate_frontier"):
-            for vm, nus in props:
-                results[vm.name] = np.asarray(
-                    evaluator.evaluate_frontier(cls, vm, nus), float)
-        else:
-            for vm, nus in props:
-                results[vm.name] = np.asarray(
-                    [evaluator(cls, vm, int(n)) for n in nus], float)
+        # The span wraps the round's evaluation only — the generator is
+        # suspended at its yield and must stay outside any span.
+        with _obs_trace.span("race_round", cat="search", cls=cls.name,
+                             round=n_round, lanes=len(props),
+                             points=sum(len(nus) for _, nus in props)):
+            results = {}
+            if hasattr(evaluator, "evaluate_many"):
+                flat = [(cls, vm, int(n)) for vm, nus in props for n in nus]
+                ts = evaluator.evaluate_many(flat)
+                at = 0
+                for vm, nus in props:
+                    results[vm.name] = np.asarray(
+                        ts[at:at + len(nus)], float)
+                    at += len(nus)
+            elif hasattr(evaluator, "evaluate_frontier"):
+                for vm, nus in props:
+                    results[vm.name] = np.asarray(
+                        evaluator.evaluate_frontier(cls, vm, nus), float)
+            else:
+                for vm, nus in props:
+                    results[vm.name] = np.asarray(
+                        [evaluator(cls, vm, int(n)) for n in nus], float)
+        n_round += 1
 
 
 def refine_class(cls: ApplicationClass, vm: VMType, nu0: int,

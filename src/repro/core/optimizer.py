@@ -61,6 +61,7 @@ from repro.core.hillclimb import HCTrace, hill_climb, race_class, \
 from repro.core.milp import rank_vm_types
 from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
     VMType, solution_cost
+from repro.obs import trace as _obs_trace
 
 
 @dataclass
@@ -88,6 +89,7 @@ class RunReport:
     initial: Optional[Dict[str, ClassSolution]] = None
     qn_dispatches: int = 0        # simulator device dispatches this run
     deployment: Optional[dict] = None  # JointPlan.summary() (private cloud)
+    telemetry: Optional[dict] = None   # {"qn": sim-stat deltas, "spans": ...}
 
     def to_json(self) -> str:
         return json.dumps({
@@ -99,19 +101,32 @@ class RunReport:
             "initial": ({k: v.as_dict() for k, v in self.initial.items()}
                         if self.initial else None),
             "deployment": self.deployment,
+            "telemetry": self.telemetry,
         }, indent=1)
 
 
 def _report(sols: Dict[str, ClassSolution], traces: Dict[str, HCTrace],
-            init: Dict[str, ClassSolution], t0: float, d0: int) -> RunReport:
+            init: Dict[str, ClassSolution], t0: float,
+            qn0: Dict[str, int]) -> RunReport:
     """Shared epilogue of every gait: one place assembles the report, so
-    all entry points stay consistent on metadata/accounting."""
+    all entry points stay consistent on metadata/accounting.  ``qn0`` is
+    the ``qn_sim.sim_stats()`` snapshot taken at run start; the report's
+    ``telemetry`` carries the run's deltas (and, when a tracer is
+    installed, the span summary so far — spans still open at report time,
+    e.g. the driver's own ``solve`` span, close after it)."""
+    qn1 = qn_sim.sim_stats()
+    qn_delta = {k: qn1[k] - qn0.get(k, 0) for k in qn1}
+    telemetry = {"qn": qn_delta}
+    tracer = _obs_trace.active()
+    if tracer is not None:
+        telemetry["spans"] = tracer.summary()
     return RunReport(solutions=sols,
                      total_cost_per_h=solution_cost(sols),
                      wall_s=time.time() - t0,
                      evals=sum(t.evals for t in traces.values()),
                      traces=traces, initial=init,
-                     qn_dispatches=qn_sim.dispatch_count() - d0)
+                     qn_dispatches=qn_delta["dispatches"],
+                     telemetry=telemetry)
 
 
 class DSpace4Cloud:
@@ -152,7 +167,9 @@ class DSpace4Cloud:
         """``milp.rank_vm_types`` memoized per instance — both the race
         and the private-cloud coordinator read it."""
         if self._rank_cache is None:
-            self._rank_cache = rank_vm_types(self.problem)
+            with _obs_trace.span("tier:kkt", cat="tier",
+                                 classes=len(self.problem.classes)):
+                self._rank_cache = rank_vm_types(self.problem)
         return self._rank_cache
 
     def _coordination_lanes(self) -> Dict[str, List]:
@@ -196,7 +213,7 @@ class DSpace4Cloud:
         service-level dispatch accounting.
         """
         t0 = time.time()
-        d0 = qn_sim.dispatch_count()
+        qn0 = qn_sim.sim_stats()
         ranking = self._ranking()
         init = {name: cands[0] for name, cands in ranking.items()}
         racers: Dict[str, object] = {}
@@ -227,7 +244,7 @@ class DSpace4Cloud:
                     sols[name] = stop.value
             proposed = nxt
         if self.deployment is None:
-            return _report(sols, traces, init, t0, d0)
+            return _report(sols, traces, init, t0, qn0)
 
         # ---- private cloud: pack the raced fleet; coordinate if it
         # over-commits.  The coordinator speaks the same propose/receive
@@ -247,7 +264,7 @@ class DSpace4Cloud:
                 break
             results = yield [EvalRequest(cls=cls, vm=vm, nus=list(nus))
                              for cls, vm, nus in props]
-        report = _report(plan.solutions, traces, init, t0, d0)
+        report = _report(plan.solutions, traces, init, t0, qn0)
         report.deployment = plan.summary()
         return report
 
@@ -264,41 +281,61 @@ class DSpace4Cloud:
         the point-wise scalar gait, which keeps the paper-verbatim
         analytic-locked VM choice."""
         if not self.batched:
-            t0 = time.time()
-            d0 = qn_sim.dispatch_count()
-            init = {name: cands[0]
-                    for name, cands in self._ranking().items()}
-            sols, hc_traces = hill_climb(self.problem, init, self.evaluate,
-                                         parallel=parallel,
-                                         window=self.window)
-            traces = {request_id(name, init[name].vm_type): tr
-                      for name, tr in hc_traces.items()}
-            plan = None
-            if self.deployment is not None:
-                plan = joint_mod.coordinate(
-                    self.problem, self.deployment, sols,
-                    self._coordination_lanes(), self.evaluate,
-                    window=self.window, traces=traces)
-                sols = plan.solutions
-            report = _report(sols, traces, init, t0, d0)
-            if plan is not None:
-                report.deployment = plan.summary()
-            return report
+            with _obs_trace.span("solve", cat="solve", mode="pointwise",
+                                 classes=len(self.problem.classes)):
+                t0 = time.time()
+                qn0 = qn_sim.sim_stats()
+                init = {name: cands[0]
+                        for name, cands in self._ranking().items()}
+                sols, hc_traces = hill_climb(self.problem, init,
+                                             self.evaluate,
+                                             parallel=parallel,
+                                             window=self.window)
+                traces = {request_id(name, init[name].vm_type): tr
+                          for name, tr in hc_traces.items()}
+                plan = None
+                if self.deployment is not None:
+                    plan = joint_mod.coordinate(
+                        self.problem, self.deployment, sols,
+                        self._coordination_lanes(), self.evaluate,
+                        window=self.window, traces=traces)
+                    sols = plan.solutions
+                report = _report(sols, traces, init, t0, qn0)
+                if plan is not None:
+                    report.deployment = plan.summary()
+                return report
 
+        # Batched driver of run_steps.  Spans live HERE, not inside the
+        # generator (which suspends mid-round): the priming next() runs the
+        # ranking (tier:kkt nests under solve), then every scheduling round
+        # is one race_round span wrapping one fused evaluate_many.
         gen = self.run_steps()
-        results = None
-        while True:
+        with _obs_trace.span("solve", cat="solve", mode="batched",
+                             classes=len(self.problem.classes)):
             try:
-                reqs = gen.send(results) if results is not None \
-                    else next(gen)
-            except StopIteration as stop:
+                reqs = next(gen)
+            except StopIteration as stop:      # pragma: no cover - no classes
                 return stop.value
-            flat = [(r.cls, r.vm, int(nu)) for r in reqs for nu in r.nus]
-            ts = self.evaluate.evaluate_many(flat)
-            results, at = {}, 0
-            for r in reqs:
-                results[r.rid] = np.asarray(ts[at:at + len(r.nus)])
-                at += len(r.nus)
+            n_round = 0
+            with _obs_trace.span("tier:qn", cat="tier"):
+                while True:
+                    with _obs_trace.span(
+                            "race_round", cat="search", round=n_round,
+                            windows=len(reqs),
+                            points=sum(len(r.nus) for r in reqs)):
+                        flat = [(r.cls, r.vm, int(nu))
+                                for r in reqs for nu in r.nus]
+                        ts = self.evaluate.evaluate_many(flat)
+                        results, at = {}, 0
+                        for r in reqs:
+                            results[r.rid] = np.asarray(
+                                ts[at:at + len(r.nus)])
+                            at += len(r.nus)
+                    n_round += 1
+                    try:
+                        reqs = gen.send(results)
+                    except StopIteration as stop:
+                        return stop.value
 
     # ---------------------------------------------------------- fast mode
     def run_fast(self, frontier_span: int = 64) -> RunReport:
@@ -312,39 +349,45 @@ class DSpace4Cloud:
         fusion group — 2-3 per class total, catalog-wide (see
         results/BENCH_hc_convergence.json / BENCH_vm_race.json)."""
         t0 = time.time()
-        d0 = qn_sim.dispatch_count()
-        ranking = self._ranking()
-        init = {name: cands[0] for name, cands in ranking.items()}
-        sols: Dict[str, ClassSolution] = {}
-        traces: Dict[str, HCTrace] = {}
-        lanes_by_class: Dict[str, List] = {}
-        for cls in self.problem.classes:
-            lanes = []
-            for cand in ranking[cls.name]:
-                vm = self.problem.vm_by_name(cand.vm_type)
-                lanes.append((vm, amva_nu_seed(cls, vm, cand.nu,
-                                               frontier_span)))
-            lanes_by_class[cls.name] = lanes
-            sols[cls.name] = race_class(cls, lanes, self.evaluate,
-                                        window=self.window, traces=traces)
-        plan = None
-        if self.deployment is not None:
-            # coordination lanes keep the AMVA-frontier seeds where the
-            # race already computed them (race=True covers the full
-            # ranking; under race=False the analytic ranking fills in)
-            lanes = self._coordination_lanes()
-            for name, raced in lanes_by_class.items():
-                seeded = {vm.name: nu for vm, nu in raced}
-                lanes[name] = [(vm, seeded.get(vm.name, nu))
-                               for vm, nu in lanes[name]]
-            plan = joint_mod.coordinate(
-                self.problem, self.deployment, sols, lanes, self.evaluate,
-                window=self.window, traces=traces)
-            sols = plan.solutions
-        report = _report(sols, traces, init, t0, d0)
-        if plan is not None:
-            report.deployment = plan.summary()
-        return report
+        qn0 = qn_sim.sim_stats()
+        with _obs_trace.span("solve", cat="solve", mode="fast",
+                             classes=len(self.problem.classes)):
+            ranking = self._ranking()
+            init = {name: cands[0] for name, cands in ranking.items()}
+            sols: Dict[str, ClassSolution] = {}
+            traces: Dict[str, HCTrace] = {}
+            lanes_by_class: Dict[str, List] = {}
+            for cls in self.problem.classes:
+                lanes = []
+                with _obs_trace.span("tier:amva", cat="tier", cls=cls.name,
+                                     lanes=len(ranking[cls.name])):
+                    for cand in ranking[cls.name]:
+                        vm = self.problem.vm_by_name(cand.vm_type)
+                        lanes.append((vm, amva_nu_seed(cls, vm, cand.nu,
+                                                       frontier_span)))
+                lanes_by_class[cls.name] = lanes
+                with _obs_trace.span("tier:qn", cat="tier", cls=cls.name):
+                    sols[cls.name] = race_class(cls, lanes, self.evaluate,
+                                                window=self.window,
+                                                traces=traces)
+            plan = None
+            if self.deployment is not None:
+                # coordination lanes keep the AMVA-frontier seeds where the
+                # race already computed them (race=True covers the full
+                # ranking; under race=False the analytic ranking fills in)
+                lanes = self._coordination_lanes()
+                for name, raced in lanes_by_class.items():
+                    seeded = {vm.name: nu for vm, nu in raced}
+                    lanes[name] = [(vm, seeded.get(vm.name, nu))
+                                   for vm, nu in lanes[name]]
+                plan = joint_mod.coordinate(
+                    self.problem, self.deployment, sols, lanes,
+                    self.evaluate, window=self.window, traces=traces)
+                sols = plan.solutions
+            report = _report(sols, traces, init, t0, qn0)
+            if plan is not None:
+                report.deployment = plan.summary()
+            return report
 
     # ------------------------------------------------------------ file API
     @staticmethod

@@ -24,7 +24,6 @@ against the detailed trace-replay simulator in ``cluster_sim.py``).
 from __future__ import annotations
 
 import os
-import threading
 from dataclasses import dataclass
 from functools import partial
 from typing import Tuple
@@ -32,6 +31,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 INF = jnp.float32(1e30)
 _PRIO = jnp.float32(1e15)       # added to map-stage keys: reduce dispatches first
@@ -294,24 +296,36 @@ def _batch_sim_fn(impl):
 # The hill climber probes classes from a thread pool, so updates take a lock.
 # ---------------------------------------------------------------------------
 
-_SIM_STATS = {"dispatches": 0, "lanes": 0, "padded_lanes": 0,
-              "events_total": 0, "events_useful": 0}
-_DISPATCH_LOCK = threading.Lock()
+# Counters live in the process-global metrics registry (repro.obs.metrics)
+# under the ``qn.`` prefix; the names below are the historical sim_stats
+# keys.  All five update atomically under the shared registry lock — the
+# same guarantee the old private _DISPATCH_LOCK gave — so sim_stats() is
+# always a consistent snapshot of one-or-more whole dispatches.
+_SIM_STAT_KEYS = ("dispatches", "lanes", "padded_lanes",
+                  "events_total", "events_useful")
+_REG = _obs_metrics.registry()
+_QN_COUNTERS = {k: _REG.counter(f"qn.{k}") for k in _SIM_STAT_KEYS}
+_QN_WASTE = _REG.gauge(
+    "qn.padded_waste_ratio",
+    help="1 - events_useful/events_total over process lifetime")
 
 
 def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
                     events_total: int = 0, events_useful: int = 0) -> None:
-    with _DISPATCH_LOCK:
-        _SIM_STATS["dispatches"] += n
-        _SIM_STATS["lanes"] += n if lanes is None else lanes
-        _SIM_STATS["padded_lanes"] += padded_lanes
-        _SIM_STATS["events_total"] += events_total
-        _SIM_STATS["events_useful"] += events_useful
+    with _REG.lock:
+        _QN_COUNTERS["dispatches"].inc(n)
+        _QN_COUNTERS["lanes"].inc(n if lanes is None else lanes)
+        _QN_COUNTERS["padded_lanes"].inc(padded_lanes)
+        _QN_COUNTERS["events_total"].inc(events_total)
+        _QN_COUNTERS["events_useful"].inc(events_useful)
+        tot = _QN_COUNTERS["events_total"].value
+        if tot:
+            _QN_WASTE.set(1.0 - _QN_COUNTERS["events_useful"].value / tot)
 
 
 def dispatch_count() -> int:
     """Total simulator device dispatches issued by this process so far."""
-    return _SIM_STATS["dispatches"]
+    return _QN_COUNTERS["dispatches"].value
 
 
 def sim_stats() -> dict:
@@ -319,18 +333,27 @@ def sim_stats() -> dict:
     ``lanes`` (vmapped candidate x replication programs, incl. pow2
     padding), ``padded_lanes`` (lanes that were pure padding), and the
     scan-step totals ``events_total`` vs ``events_useful`` (logical budgets
-    only) — their ratio is the batch-padding efficiency."""
-    with _DISPATCH_LOCK:
-        return dict(_SIM_STATS)
+    only) — their ratio is the batch-padding efficiency.
+
+    Backed by the ``qn.*`` counters of ``repro.obs.registry()``; the dict
+    shape and values are bit-identical to the pre-registry implementation
+    (asserted in tests/test_impl_dispatch.py)."""
+    with _REG.lock:
+        return {k: _QN_COUNTERS[k].value for k in _SIM_STAT_KEYS}
 
 
-def reset_dispatch_count() -> None:
-    with _DISPATCH_LOCK:
-        for k in _SIM_STATS:
-            _SIM_STATS[k] = 0
+def reset_sim_stats() -> None:
+    """Zero ALL simulator counters (dispatches, lanes, padded_lanes,
+    events_total, events_useful) and the derived waste-ratio gauge.  This
+    is the one reset for per-run accounting; ``reset_dispatch_count`` is a
+    back-compat alias."""
+    with _REG.lock:
+        for c in _QN_COUNTERS.values():
+            c.reset()
+        _QN_WASTE.reset()
 
 
-reset_sim_stats = reset_dispatch_count
+reset_dispatch_count = reset_sim_stats
 
 
 def _pow2(n: int) -> int:
@@ -362,12 +385,14 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
     for r in range(replications):
         ne = _pow2(p.n_events)
         _count_dispatch(events_total=ne, events_useful=ne)
-        m, c = _sim_jit(
-            jnp.int32(p.n_map), jnp.int32(p.n_reduce),
-            jnp.float32(p.m_avg), jnp.float32(p.r_avg),
-            jnp.float32(p.think_ms), jnp.int32(p.slots), p.seed + 1000 * r,
-            h_users=p.h_users, max_slots=_pow2(p.slots),
-            n_events=ne, warmup_jobs=p.warmup_jobs)
+        with _obs_trace.span("kernel:scalar", cat="kernel", events=ne):
+            m, c = _sim_jit(
+                jnp.int32(p.n_map), jnp.int32(p.n_reduce),
+                jnp.float32(p.m_avg), jnp.float32(p.r_avg),
+                jnp.float32(p.think_ms), jnp.int32(p.slots),
+                p.seed + 1000 * r,
+                h_users=p.h_users, max_slots=_pow2(p.slots),
+                n_events=ne, warmup_jobs=p.warmup_jobs)
         outs.append(float(m))
         cnts.append(float(c))
     return _combine(outs, cnts)
@@ -415,11 +440,14 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
     for r in range(replications):
         ne = _pow2(p.n_events)
         _count_dispatch(events_total=ne, events_useful=ne)
-        m, c = _sim_replay_jit(
-            jnp.int32(p.n_map), jnp.int32(p.n_reduce),
-            jnp.float32(p.think_ms), jnp.int32(p.slots), p.seed + 1000 * r,
-            ms, rs, h_users=p.h_users, max_slots=_pow2(p.slots),
-            n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
+        with _obs_trace.span("kernel:scalar", cat="kernel", events=ne,
+                             replay=True):
+            m, c = _sim_replay_jit(
+                jnp.int32(p.n_map), jnp.int32(p.n_reduce),
+                jnp.float32(p.think_ms), jnp.int32(p.slots),
+                p.seed + 1000 * r,
+                ms, rs, h_users=p.h_users, max_slots=_pow2(p.slots),
+                n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
         outs.append(float(m)); cnts.append(float(c))
     return _combine(outs, cnts)[0]
 
@@ -508,13 +536,16 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
         events_useful=int(n_ev[:C].sum()) * R)
-    mean, cnt = sim_fn(
-        jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
-        jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
-        jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),
-        jnp.asarray(rep(n_ev), jnp.int32), ms, rs,
-        h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
-        warmup_jobs=warmup_jobs)
+    with _obs_trace.span(f"kernel:{impl or default_impl()}", cat="kernel",
+                         lanes=C_pad * R, candidates=C,
+                         scan_len=scan_len, replay=ms is not None):
+        mean, cnt = sim_fn(
+            jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
+            jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
+            jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),
+            jnp.asarray(rep(n_ev), jnp.int32), ms, rs,
+            h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
+            warmup_jobs=warmup_jobs)
     mean = np.asarray(mean, np.float64).reshape(C_pad, R)[:C]
     cnt = np.asarray(cnt, np.float64).reshape(C_pad, R)[:C]
 

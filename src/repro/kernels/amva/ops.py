@@ -1,7 +1,11 @@
 """jit'd public wrappers for the batched-AMVA kernels (interpret on CPU,
 native Pallas on TPU).  ``ps_fixed_point`` backs ``evaluators.
 amva_frontier`` — the one-launch fast tier of the optimizer; ``mva_response``
-is the degenerate-case exact-MVA oracle at kernel speed."""
+is the degenerate-case exact-MVA oracle at kernel speed.
+
+Both wrappers open ``kernel:amva*`` telemetry spans around the jitted
+launch and label the region with ``jax.named_scope`` for XLA profiles.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,6 +13,7 @@ from functools import partial
 import jax
 
 from repro.kernels.amva import kernel
+from repro.obs import trace as _obs_trace
 
 
 def _on_tpu() -> bool:
@@ -16,12 +21,29 @@ def _on_tpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("iters",))
+def _ps_fixed_point_jit(a_over_c, b, think, h_users,
+                        iters: int = kernel.PS_ITERS):
+    with jax.named_scope("amva_ps_fixed_point"):
+        return kernel.amva_fwd(a_over_c, b, think, h_users, iters=iters,
+                               interpret=not _on_tpu())
+
+
 def ps_fixed_point(a_over_c, b, think, h_users, iters: int = kernel.PS_ITERS):
-    return kernel.amva_fwd(a_over_c, b, think, h_users, iters=iters,
-                           interpret=not _on_tpu())
+    with _obs_trace.span("kernel:amva", cat="kernel",
+                         points=int(getattr(a_over_c, "shape", (1,))[0]
+                                    if getattr(a_over_c, "ndim", 0) else 1),
+                         iters=int(iters)):
+        return _ps_fixed_point_jit(a_over_c, b, think, h_users, iters=iters)
 
 
 @partial(jax.jit, static_argnames=("h_users",))
+def _mva_response_jit(demand, think, h_users: int):
+    with jax.named_scope("amva_exact_mva"):
+        return kernel.mva_fwd(demand, think, h_users=h_users,
+                              interpret=not _on_tpu())
+
+
 def mva_response(demand, think, h_users: int):
-    return kernel.mva_fwd(demand, think, h_users=h_users,
-                          interpret=not _on_tpu())
+    with _obs_trace.span("kernel:amva_exact", cat="kernel",
+                         h_users=int(h_users)):
+        return _mva_response_jit(demand, think, h_users=h_users)

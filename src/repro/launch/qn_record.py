@@ -83,8 +83,10 @@ def _qn_cell(cell: dict, reps: int) -> List[dict]:
     lanes = cell["batch"]
     events = statics["n_events"] * lanes
     recs, outs = [], {}
+    # Lower the jitted inner (the public ops wrapper adds a telemetry span
+    # and is no longer itself a jit object).
     for impl, fn in (("jnp", qn_sim._sim_batch_jit),
-                     ("pallas", qn_event_ops.sim_batch)):
+                     ("pallas", qn_event_ops._sim_batch_jit)):
         rec = {"cell": "qn_event", "impl": impl, **{
             k: cell[k] for k in ("batch", "n_map", "n_reduce", "h_users",
                                  "min_jobs", "warmup_jobs")},
@@ -121,7 +123,7 @@ def _amva_cell(n: int, h_users: int, reps: int, seed: int = 0) -> List[dict]:
     h = jnp.full((n,), float(h_users), jnp.float32)
     recs, outs = [], {}
     for impl, fn in (("jnp", jax.jit(mva.ps_response_batch)),
-                     ("pallas", amva_ops.ps_fixed_point)):
+                     ("pallas", amva_ops._ps_fixed_point_jit)):
         rec = {"cell": "amva_ps", "impl": impl, "batch": n,
                "h_users": h_users, "iters": mva.PS_ITERS}
         try:

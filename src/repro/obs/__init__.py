@@ -1,0 +1,24 @@
+"""Telemetry plane: span tracing, metrics registry, flight recorder.
+
+Zero-dependency (stdlib + optional jax profiler bridge) observability for
+the solve → fusion → kernel stack.  See docs/observability.md.
+"""
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    counter_delta,
+    registry,
+)
+from .recorder import FlightRecorder  # noqa: F401
+from .trace import (  # noqa: F401
+    Span,
+    Tracer,
+    active,
+    install,
+    span,
+    tracing,
+    uninstall,
+    validate_chrome_trace,
+)

@@ -1,0 +1,196 @@
+"""Zero-dependency metrics registry: counters, gauges, fixed-bucket
+histograms.
+
+One process-global ``MetricsRegistry`` (``registry()``) replaces the
+ad-hoc stat dicts that grew per subsystem (``qn_sim._SIM_STATS``,
+scheduler/admission tallies): every layer registers named metrics and the
+whole stack is observable from one ``snapshot()``.  Design constraints:
+
+  * **bit-compatible accounting** — counters hold exact ints and all
+    mutations share ONE registry lock, so multi-metric updates (e.g. the
+    five ``qn.*`` counters of one fused dispatch) are atomic and a
+    snapshot can never tear across them.  ``qn_sim.sim_stats()`` /
+    ``dispatch_count()`` read straight from this registry and reproduce
+    the pre-registry dict exactly (asserted in
+    ``tests/test_impl_dispatch.py``);
+  * **zero dependencies** — stdlib only; safe to import from every layer
+    (kernels included) without cycles;
+  * **cheap when idle** — an ``inc()`` is a lock + int add; no metric is
+    sampled unless something calls ``snapshot()``.
+
+Metric names are dotted (``qn.dispatches``, ``fusion.group_size``); the
+full catalog lives in docs/observability.md.
+"""
+from __future__ import annotations
+
+import threading
+from bisect import bisect_left
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+
+class Counter:
+    """Monotonic integer counter (resettable)."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, lock: threading.RLock, help: str = ""):
+        self.name = name
+        self.help = help
+        self._lock = lock
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self.value += int(n)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.value = 0
+
+    def snapshot(self):
+        return int(self.value)
+
+
+class Gauge:
+    """Last-written float value."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, lock: threading.RLock, help: str = ""):
+        self.name = name
+        self.help = help
+        self._lock = lock
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self.value = float(v)
+
+    def reset(self) -> None:
+        self.set(0.0)
+
+    def snapshot(self):
+        return float(self.value)
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``buckets`` are ascending upper bounds
+    (``le``); one implicit ``+inf`` bucket catches the tail, so the bucket
+    counts always sum to ``count`` (property-tested in
+    ``tests/test_obs.py``)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, lock: Optional[threading.RLock] = None,
+                 help: str = "", *,
+                 buckets: Sequence[float] = (1, 2, 5, 10, 25, 50, 100)):
+        if list(buckets) != sorted(buckets) or len(set(buckets)) != len(
+                tuple(buckets)):
+            raise ValueError(f"buckets must be strictly ascending: {buckets}")
+        self.name = name
+        self.help = help
+        self._lock = lock if lock is not None else threading.RLock()
+        self.buckets: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        self.bucket_counts = [0] * (len(self.buckets) + 1)   # + the +inf tail
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.bucket_counts[bisect_left(self.buckets, v)] += 1
+            self.count += 1
+            self.sum += v
+
+    def reset(self) -> None:
+        with self._lock:
+            self.bucket_counts = [0] * (len(self.buckets) + 1)
+            self.count = 0
+            self.sum = 0.0
+
+    def snapshot(self):
+        les = [str(b) for b in self.buckets] + ["+inf"]
+        return {"buckets": dict(zip(les, list(self.bucket_counts))),
+                "count": int(self.count), "sum": float(self.sum)}
+
+
+class MetricsRegistry:
+    """Named metric store with get-or-create semantics.
+
+    ``lock`` is shared by every metric the registry creates — acquire it
+    (it is reentrant) to make a multi-metric update atomic with respect to
+    ``snapshot()``/``reset()``."""
+
+    def __init__(self):
+        self.lock = threading.RLock()
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, cls, help: str, **kw):
+        with self.lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name, self.lock, help, **kw)
+            elif not isinstance(m, cls):
+                raise TypeError(f"metric {name!r} already registered as "
+                                f"{m.kind}, not {cls.kind}")
+            return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(name, Counter, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(name, Gauge, help)
+
+    def histogram(self, name: str, help: str = "", *,
+                  buckets: Sequence[float] = (1, 2, 5, 10, 25, 50, 100),
+                  ) -> Histogram:
+        return self._get(name, Histogram, help, buckets=buckets)
+
+    # ------------------------------------------------------------ reading
+    def names(self) -> Iterable[str]:
+        with self.lock:
+            return sorted(self._metrics)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def snapshot(self, prefix: Optional[str] = None) -> Dict[str, object]:
+        """Consistent point-in-time view: ``{name: value}`` (counters and
+        gauges flat, histograms as ``{"buckets", "count", "sum"}``)."""
+        with self.lock:
+            return {name: m.snapshot()
+                    for name, m in sorted(self._metrics.items())
+                    if prefix is None or name.startswith(prefix)}
+
+    def reset(self, prefix: Optional[str] = None) -> None:
+        """Zero every metric (or only those under ``prefix``); metric
+        objects and registrations survive, so cached references in
+        instrumented modules stay valid."""
+        with self.lock:
+            for name, m in self._metrics.items():
+                if prefix is None or name.startswith(prefix):
+                    m.reset()
+
+
+def counter_delta(before: Dict[str, object],
+                  after: Dict[str, object]) -> Dict[str, object]:
+    """Per-name difference of two ``snapshot()``s, for scalar metrics —
+    the per-solve / per-benchmark view over the process-global registry.
+    Histogram entries are passed through from ``after`` (deltas of bucket
+    maps are rarely what a report wants)."""
+    out: Dict[str, object] = {}
+    for name, v in after.items():
+        if isinstance(v, dict):
+            out[name] = v
+        else:
+            b = before.get(name, 0)
+            out[name] = v - (b if not isinstance(b, dict) else 0)
+    return out
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-global registry every instrumented layer reports into."""
+    return _REGISTRY

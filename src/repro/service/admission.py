@@ -36,8 +36,18 @@ from typing import Dict, Optional
 from repro.core.evaluators import workload_event_budget
 from repro.core.milp import rank_vm_types
 from repro.core.problem import Problem
+from repro.obs import metrics as _obs_metrics
 
 ADMIT, DEFER, SHED = "admit", "defer", "shed"
+
+# Registry twins of AdmissionStats' decision tallies (the dataclass stays
+# the per-controller record; the counters aggregate process-wide across
+# however many services/controllers a process runs).
+_REG = _obs_metrics.registry()
+_VERDICTS = {v: _REG.counter(f"admission.{v}") for v in
+             (ADMIT, DEFER, SHED)}
+_INFLIGHT_EVENTS = _REG.gauge("admission.inflight_events")
+_INFLIGHT_CORES = _REG.gauge("admission.inflight_cores")
 
 
 def estimate_job_events(problem: Problem, *, window: int, min_jobs: int,
@@ -130,6 +140,7 @@ class AdmissionController:
         over-limit submission is shed."""
         if self.max_queue is not None and queue_len >= self.max_queue:
             self.stats.shed += 1
+            _VERDICTS[SHED].inc()
             return False
         return True
 
@@ -146,9 +157,11 @@ class AdmissionController:
         if oversize:
             if self.policy == "shed":
                 self.stats.shed += 1
+                _VERDICTS[SHED].inc()
                 return SHED
             if self._active:                  # oversize: wait for solitude
                 self.stats.deferred += 1
+                _VERDICTS[DEFER].inc()
                 return DEFER
             self.stats.oversize_admitted += 1
         else:
@@ -159,11 +172,15 @@ class AdmissionController:
                 > self.max_physical_cores
             if over_events or over_cores:
                 self.stats.deferred += 1
+                _VERDICTS[DEFER].inc()
                 return DEFER
         self._active[job_id] = (events, cores)
         self.stats.admitted += 1
+        _VERDICTS[ADMIT].inc()
         self.stats.inflight_events += events
         self.stats.inflight_cores += cores
+        _INFLIGHT_EVENTS.set(self.stats.inflight_events)
+        _INFLIGHT_CORES.set(self.stats.inflight_cores)
         self.stats.peak_inflight_events = max(
             self.stats.peak_inflight_events, self.stats.inflight_events)
         self.stats.peak_inflight_cores = max(
@@ -174,5 +191,7 @@ class AdmissionController:
         events, cores = self._active.pop(job_id, (0, 0))
         self.stats.inflight_events -= events
         self.stats.inflight_cores -= cores
+        _INFLIGHT_EVENTS.set(self.stats.inflight_events)
+        _INFLIGHT_CORES.set(self.stats.inflight_cores)
         if events or cores:
             self.stats.released += 1

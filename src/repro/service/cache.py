@@ -23,9 +23,16 @@ from typing import Dict, Optional, Tuple
 from repro.core.workload import profile_hash, samples_digest  # noqa: F401
 #   (re-exported: the digests are defined next to the workload kinds they
 #    must cover, but remain part of this module's public API)
+from repro.obs import metrics as _obs_metrics
 
 # (profile_hash, vm_name, nu, seed) -> mean response time [ms]
 CacheKey = Tuple[str, str, int, int]
+
+# Process-wide cache counters (aggregated over every EvalCache instance;
+# each instance keeps its own hits/misses for per-service stats()).
+_REG = _obs_metrics.registry()
+_CACHE = {k: _REG.counter(f"cache.{k}") for k in
+          ("hits", "misses", "puts", "spills", "loads")}
 
 
 class EvalCache:
@@ -53,8 +60,10 @@ class EvalCache:
         with self._lock:
             if key in self._d:
                 self.hits += 1
+                _CACHE["hits"].inc()
                 return self._d[key]
             self.misses += 1
+            _CACHE["misses"].inc()
             return None
 
     def get(self, key: CacheKey, default: Optional[float] = None):
@@ -66,6 +75,7 @@ class EvalCache:
     def put(self, key: CacheKey, value: float) -> None:
         with self._lock:
             self._d[key] = float(value)
+        _CACHE["puts"].inc()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -96,6 +106,7 @@ class EvalCache:
         with open(tmp, "w") as f:
             json.dump(rows, f)
         os.replace(tmp, path)
+        _CACHE["spills"].inc()
         return path
 
     def load(self, path: Optional[str] = None) -> int:
@@ -105,4 +116,5 @@ class EvalCache:
         with self._lock:
             for d, vm, nu, seed, v in rows:
                 self._d[(d, vm, int(nu), int(seed))] = float(v)
+        _CACHE["loads"].inc()
         return len(rows)

@@ -21,6 +21,12 @@ One scheduling round (``step()``)::
 Throughput scales sub-linearly in dispatches: N similar concurrent jobs
 cost about as many fused dispatches as the slowest single job alone
 (benchmarks/service_throughput.py).
+
+Telemetry (docs/observability.md): every round appends one structured
+event to the flight recorder (a bounded ring buffer, dumped as JSON when
+a job fails or via ``dump_flight_recorder()``); round wall time feeds the
+``service.round_ms`` histogram; and when a tracer is installed the round
+opens a ``service_round`` span above the scheduler's ``flush``.
 """
 from __future__ import annotations
 
@@ -31,11 +37,22 @@ from typing import Dict, List, Optional, Union
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import Problem
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+from repro.obs.recorder import FlightRecorder
 from repro.service.admission import ADMIT, SHED, AdmissionController, \
     estimate_job_cores, estimate_job_events
 from repro.service.cache import EvalCache
 from repro.service.jobs import Job, JobState, parse_submission
 from repro.service.scheduler import FusionScheduler, SimSpec, WindowRequest
+
+_REG = _obs_metrics.registry()
+_ROUND_MS = _REG.histogram(
+    "service.round_ms", help="wall time of one scheduling round [ms]",
+    buckets=(1, 5, 10, 25, 50, 100, 250, 500, 1000, 5000))
+_ROUNDS = _REG.counter("service.rounds")
+_JOBS_DONE = _REG.counter("service.jobs_finished")
+_JOBS_FAILED = _REG.counter("service.jobs_failed")
 
 
 class SolverService:
@@ -44,12 +61,19 @@ class SolverService:
     ``cache_path`` enables the persistent spill: an existing file is
     warm-loaded, and ``save_cache()`` (called automatically by
     ``run_until_complete``) writes it back.
+
+    ``recorder`` (or the default ring of ``recorder_capacity`` events)
+    keeps the per-round flight log; ``recorder_path`` makes the service
+    auto-dump it as JSON the first time a job FAILs.
     """
 
     def __init__(self, *, cache: Optional[EvalCache] = None,
                  cache_path: Optional[str] = None,
                  admission: Optional[AdmissionController] = None,
-                 window: int = 16, max_rounds: int = 10_000):
+                 window: int = 16, max_rounds: int = 10_000,
+                 recorder: Optional[FlightRecorder] = None,
+                 recorder_capacity: int = 4096,
+                 recorder_path: Optional[str] = None):
         self.cache = cache if cache is not None else EvalCache(cache_path)
         self.scheduler = FusionScheduler(self.cache)
         self.admission = admission if admission is not None \
@@ -57,6 +81,9 @@ class SolverService:
         self.window = window
         self.max_rounds = max_rounds
         self.rounds = 0
+        self.recorder = recorder if recorder is not None \
+            else FlightRecorder(recorder_capacity)
+        self.recorder_path = recorder_path
         self._jobs: Dict[str, Job] = {}
         self._queue: List[str] = []
         self._active: List[str] = []
@@ -107,9 +134,14 @@ class SolverService:
         self._jobs[job.id] = job
         if self.admission.accept_submission(len(self._queue)):
             self._queue.append(job.id)
+            self.recorder.record("submit", job=job.id, tag=tag,
+                                 classes=len(problem.classes),
+                                 events_estimate=job.events_estimate)
         else:
             job.state = JobState.SHED
             job.finished_s = time.time()
+            self.recorder.record("shed", job=job.id, at="submit",
+                                 queue_len=len(self._queue))
         return job.id
 
     # ----------------------------------------------------------- admission
@@ -130,7 +162,10 @@ class SolverService:
             elif verdict == SHED:
                 job.state = JobState.SHED
                 job.finished_s = time.time()
+                self.recorder.record("shed", job=jid, at="admission")
             else:
+                self.recorder.record("defer", job=jid,
+                                     events_estimate=job.events_estimate)
                 admitted_until = i
                 break
             admitted_until = i + 1
@@ -139,6 +174,8 @@ class SolverService:
     def _activate(self, job: Job) -> None:
         job.state = JobState.SOLVING
         job.started_s = time.time()
+        self.recorder.record("activate", job=job.id,
+                             window=job.window, race=job.race)
         # the facade's own evaluator stays idle here: run_steps() proposes
         # windows and this engine satisfies them through the FusionScheduler
         # and the shared content-addressed cache
@@ -159,37 +196,55 @@ class SolverService:
     # ------------------------------------------------------------ stepping
     def step(self) -> bool:
         """One cooperative scheduling round; True while work remains."""
+        t_round = time.perf_counter()
         self._admit()
         if not self._active:
             return bool(self._queue)
         self.rounds += 1
+        _ROUNDS.inc()
 
-        requests: Dict[str, List[WindowRequest]] = {}
-        for jid in self._active:
-            job = self._jobs[jid]
-            reqs = []
-            for er in job._pending:
-                req = WindowRequest(
-                    job_id=jid, cls=er.cls, vm=er.vm,
-                    nus=[int(n) for n in er.nus], spec=job.spec,
-                    samples=job.samples_for(er.cls.name, er.vm.name))
-                self.scheduler.submit(req)
-                reqs.append(req)
-            requests[jid] = reqs
+        with _obs_trace.span("service_round", cat="service",
+                             round=self.rounds, active=len(self._active)):
+            requests: Dict[str, List[WindowRequest]] = {}
+            for jid in self._active:
+                job = self._jobs[jid]
+                reqs = []
+                for er in job._pending:
+                    req = WindowRequest(
+                        job_id=jid, cls=er.cls, vm=er.vm,
+                        nus=[int(n) for n in er.nus], spec=job.spec,
+                        samples=job.samples_for(er.cls.name, er.vm.name))
+                    self.scheduler.submit(req)
+                    reqs.append(req)
+                requests[jid] = reqs
 
-        self.scheduler.flush()
+            self.scheduler.flush()
+            flush = self.scheduler.last_flush
 
-        for jid in list(self._active):
-            job = self._jobs[jid]
-            results = {r.rid: r.result for r in requests[jid]}
-            try:
-                job._pending = job._gen.send(results)
-            except StopIteration as stop:
-                self._active.remove(jid)
-                self._finish(job, stop.value)
-            except Exception as e:
-                self._active.remove(jid)
-                self._fail(job, e)
+            advanced, finished = 0, 0
+            for jid in list(self._active):
+                job = self._jobs[jid]
+                results = {r.rid: r.result for r in requests[jid]}
+                try:
+                    job._pending = job._gen.send(results)
+                    advanced += 1
+                except StopIteration as stop:
+                    self._active.remove(jid)
+                    self._finish(job, stop.value)
+                    finished += 1
+                except Exception as e:
+                    self._active.remove(jid)
+                    self._fail(job, e)
+                    finished += 1
+
+        round_ms = (time.perf_counter() - t_round) * 1e3
+        _ROUND_MS.observe(round_ms)
+        self.recorder.record(
+            "round", n=self.rounds, active=advanced, finished=finished,
+            windows=sum(len(r) for r in requests.values()),
+            groups=flush.groups, points=flush.points,
+            dispatched=flush.points_dispatched, cached=flush.points_cached,
+            wall_ms=round(round_ms, 3))
         return bool(self._queue or self._active)
 
     def _finish(self, job: Job, report) -> None:
@@ -198,12 +253,20 @@ class SolverService:
         feasible = all(s.feasible for s in report.solutions.values())
         job.state = JobState.DONE if feasible else JobState.INFEASIBLE
         self.admission.release(job.id)
+        _JOBS_DONE.inc()
+        self.recorder.record("finish", job=job.id, state=str(job.state),
+                             cost_per_h=report.total_cost_per_h,
+                             qn_dispatches=report.qn_dispatches)
 
     def _fail(self, job: Job, err: Exception) -> None:
         job.state = JobState.FAILED
         job.error = f"{type(err).__name__}: {err}"
         job.finished_s = time.time()
         self.admission.release(job.id)
+        _JOBS_FAILED.inc()
+        self.recorder.record("fail", job=job.id, error=job.error)
+        if self.recorder_path:
+            self.recorder.save(self.recorder_path)
 
     def run_until_complete(self, max_rounds: Optional[int] = None
                            ) -> Dict[str, Job]:
@@ -211,14 +274,17 @@ class SolverService:
         if a path is configured.  Returns all jobs by id."""
         limit = max_rounds or self.max_rounds
         rounds = 0
-        while self.step():
-            rounds += 1
-            if rounds > limit:
-                raise RuntimeError(
-                    f"service did not settle within {limit} rounds "
-                    f"(queued={len(self._queue)}, active={len(self._active)})")
-        if self.cache.path:
-            self.cache.save()
+        with _obs_trace.span("service.run", cat="service",
+                             jobs=len(self._jobs)):
+            while self.step():
+                rounds += 1
+                if rounds > limit:
+                    raise RuntimeError(
+                        f"service did not settle within {limit} rounds "
+                        f"(queued={len(self._queue)}, "
+                        f"active={len(self._active)})")
+            if self.cache.path:
+                self.cache.save()
         return dict(self._jobs)
 
     # ------------------------------------------------------------- results
@@ -228,6 +294,13 @@ class SolverService:
     def result(self, job_id: str) -> dict:
         return self._jobs[job_id].summary()
 
+    def dump_flight_recorder(self, path: Optional[str] = None) -> dict:
+        """The flight-recorder ring as a JSON-ready dict; optionally also
+        written to ``path``."""
+        if path is not None:
+            return self.recorder.save(path)
+        return self.recorder.dump()
+
     def stats(self) -> dict:
         states: Dict[str, int] = {}
         for job in self._jobs.values():
@@ -236,4 +309,5 @@ class SolverService:
                 "scheduler": self.scheduler.stats(),
                 "cache": self.cache.stats(),
                 "admission": self.admission.stats.as_dict(),
+                "recorder": self.recorder.stats(),
                 "qn": qn_sim.sim_stats()}

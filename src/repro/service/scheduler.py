@@ -33,8 +33,18 @@ from repro.core.evaluators import fused_eval_call
 from repro.core.hillclimb import request_id
 from repro.core.problem import ApplicationClass, VMType
 from repro.core.workload import DAG, workload_kind
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.service.cache import CacheKey, EvalCache, profile_hash, \
     samples_digest
+
+_REG = _obs_metrics.registry()
+_GROUP_SIZE = _REG.histogram(
+    "fusion.group_size", help="points per fused dispatch group",
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+_FUSION = {k: _REG.counter(f"fusion.{k}") for k in
+           ("groups", "points", "points_dispatched", "points_cached",
+            "points_deduped")}
 
 
 @dataclass(frozen=True)
@@ -153,22 +163,25 @@ class FusionScheduler:
                     group[ck] = (prof, req.cls.think_ms,
                                  int(nu) * req.vm.slots, req.samples)
 
-        for fkey, group in todo.items():
-            kind, h_users, _sdig, spec = fkey[:4]
-            cks = list(group)
-            profs = [group[k][0] for k in cks]
-            think = [group[k][1] for k in cks]
-            slots = [group[k][2] for k in cks]
-            samples = group[cks[0]][3]
-            ts = fused_eval_call(kind, profs, think, h_users, slots,
-                                 min_jobs=spec.min_jobs,
-                                 warmup_jobs=spec.warmup_jobs,
-                                 replications=spec.replications,
-                                 seed=spec.seed, samples=samples)
-            for ck, t in zip(cks, ts):
-                self.cache.put(ck, float(t))
-            rep.groups += 1
-            rep.points_dispatched += len(cks)
+        with _obs_trace.span("flush", cat="fusion", groups=len(todo),
+                             points=rep.points, cached=rep.points_cached):
+            for fkey, group in todo.items():
+                kind, h_users, _sdig, spec = fkey[:4]
+                cks = list(group)
+                profs = [group[k][0] for k in cks]
+                think = [group[k][1] for k in cks]
+                slots = [group[k][2] for k in cks]
+                samples = group[cks[0]][3]
+                _GROUP_SIZE.observe(len(cks))
+                ts = fused_eval_call(kind, profs, think, h_users, slots,
+                                     min_jobs=spec.min_jobs,
+                                     warmup_jobs=spec.warmup_jobs,
+                                     replications=spec.replications,
+                                     seed=spec.seed, samples=samples)
+                for ck, t in zip(cks, ts):
+                    self.cache.put(ck, float(t))
+                rep.groups += 1
+                rep.points_dispatched += len(cks)
 
         for req in pending:
             req.result = np.array(
@@ -176,6 +189,12 @@ class FusionScheduler:
 
         self.fused_dispatches += rep.groups
         self.points_dispatched += rep.points_dispatched
+        with _REG.lock:
+            _FUSION["groups"].inc(rep.groups)
+            _FUSION["points"].inc(rep.points)
+            _FUSION["points_dispatched"].inc(rep.points_dispatched)
+            _FUSION["points_cached"].inc(rep.points_cached)
+            _FUSION["points_deduped"].inc(rep.points_deduped)
         self.last_flush = rep
         return pending
 

@@ -10,6 +10,7 @@ swap can never silently alter the optimizer's search path or its dispatch
 budget."""
 import pytest
 
+from repro import obs
 from repro.cloud import PrivateCloud, homogeneous_hosts
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
@@ -53,7 +54,12 @@ def _with_impl(impl, fn):
         out = fn()
     finally:
         qn_sim.set_default_impl(old)
-    return out, qn_sim.sim_stats()
+    stats = qn_sim.sim_stats()
+    # sim_stats() reads straight from the metrics registry: the qn.*
+    # counters must BE the stats, not a drifting copy
+    reg = obs.registry().snapshot("qn.")
+    assert {k: reg[f"qn.{k}"] for k in stats} == stats
+    return out, stats
 
 
 def _assert_equivalent(make_report):
