@@ -130,10 +130,12 @@ def _run(quick: bool = False):
     jids = [svc.submit(p, **kw) for p in problems]
     d0 = qn_sim.dispatch_count()
     qn0 = qn_sim.sim_stats()
+    pad0 = qn_sim.padding_stats()
     with timer() as t_service:
         jobs = svc.run_until_complete()
     service_dispatches = qn_sim.dispatch_count() - d0
     qn = {k: v - qn0[k] for k, v in qn_sim.sim_stats().items()}
+    pad = {k: v - pad0[k] for k, v in qn_sim.padding_stats().items()}
 
     parity = all(_job_equal(jobs[jid].report, rep)
                  for jid, rep in zip(jids, solo_reports))
@@ -165,7 +167,14 @@ def _run(quick: bool = False):
                     "scheduler": stats["scheduler"],
                     "cache": stats["cache"],
                     "padding_efficiency": (
-                        qn["events_useful"] / max(qn["events_total"], 1))},
+                        qn["events_useful"] / max(qn["events_total"], 1)),
+                    # bucket-grid rounding vs batch-max padding, separately
+                    # (qn_sim.padding_stats): conflating them would hide a
+                    # bucket-grid regression behind batch-shape noise
+                    "padding_split": {
+                        "bucket_padded_lanes": pad["bucket_padded_lanes"],
+                        "bucket_padded_events": pad["bucket_padded_events"],
+                        "batch_padded_events": pad["batch_padded_events"]}},
         "warm": {"dispatches": warm_dispatches, "wall_s": t_warm.s,
                  "cache_hit_rate": svc2.cache.hit_rate},
         "parity": parity,

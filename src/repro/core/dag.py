@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import qn_sim
+from repro.core import shapes as _shapes
 from repro.core.mva import ps_response, workload_demand
 from repro.core.workload import DagJob, Stage
 from repro.obs import trace as _obs_trace
@@ -104,33 +105,54 @@ def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
         resp_sum=jnp.float32(0), resp_cnt=jnp.float32(0),
         done_jobs=jnp.int32(0))
     slot_enabled = jnp.arange(max_slots) < slots_cap
+    i32 = jnp.int32
 
-    def step(s, i):
-        free_slot = jnp.any((s["slot_user"] < 0) & slot_enabled)
-        has_pending = jnp.any(s["pending"] > 0)
-        b_dispatch = free_slot & has_pending
+    # RNG hoisted out of the scan (the same bit-preserving transformation
+    # as ``qn_sim._rng_tables``): every draw is a pure function of
+    # ``(key, i)``.  Replay mode precomputes the sample *index* per event
+    # (the drawn value still depends on the user's current stage, so the
+    # gather happens inside the step); exponential mode precomputes the
+    # unit draw, scaled by the stage mean inside the step.
+    idx_e = jnp.arange(n_events)
 
-        # deeper stages first (paper's class-switch priority), FIFO inside
+    def _service(i):
         key_i = jax.random.fold_in(key, i)
-        # two-level: pick max depth with pending, then min arrival
+        if samples is not None:
+            return jax.random.randint(key_i, (), 0, samples.shape[1]), \
+                jnp.float32(0)
+        e = jax.random.exponential(key_i)
+        return i32(0), e
+
+    def _think(i):
+        return jax.random.exponential(jax.random.fold_in(key, i + fold_base))
+
+    sidx_t, sexp_t = jax.vmap(_service)(idx_e)
+    td_t = jax.vmap(_think)(idx_e)
+
+    def step(s, xs):
+        i, st_idx, st_exp, td = xs
+
+        avail = (s["slot_user"] < 0) & slot_enabled
+        slot = jnp.argmax(avail)
+        free_slot = avail[slot]
+        b_dispatch = free_slot & jnp.any(s["pending"] > 0)
+
+        # deeper stages first (paper's class-switch priority), FIFO inside:
+        # two-level selection — max depth with pending, then min arrival
         has_p = s["pending"] > 0
         max_depth = jnp.max(jnp.where(has_p, s["phase"], -1))
         cand = has_p & (s["phase"] == max_depth)
         u = jnp.argmin(jnp.where(cand, s["arrival"], INF))
         stage_idx = jnp.clip(s["phase"][u] - 1, 0, n_stages - 1)
         if samples is not None:
-            idx = jax.random.randint(key_i, (), 0, samples.shape[1])
-            st = samples[stage_idx, idx]
+            st = samples[stage_idx, st_idx]
         else:
-            st = jax.random.exponential(key_i) * t_avg[stage_idx]
-        slot = jnp.argmax((s["slot_user"] < 0) & slot_enabled)
-        d_slot_end = s["slot_end"].at[slot].set(s["now"] + st)
-        d_slot_user = s["slot_user"].at[slot].set(u.astype(jnp.int32))
-        d_pending = s["pending"].at[u].add(-1)
-        d_inflight = s["inflight"].at[u].add(1)
+            st = st_exp * t_avg[stage_idx]
 
-        t_slot = jnp.min(s["slot_end"])
-        t_think = jnp.min(s["think_end"])
+        cslot = jnp.argmin(s["slot_end"])
+        t_slot = s["slot_end"][cslot]
+        tu = jnp.argmin(s["think_end"])
+        t_think = s["think_end"][tu]
         b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
         b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
         if n_events_active is not None:          # padded batch: mask tail
@@ -139,73 +161,79 @@ def _dag_sim(n_tasks, t_avg, think_ms, slots_cap, h_users: int,
             b_complete = b_complete & active
             b_think = b_think & active
 
-        cslot = jnp.argmin(s["slot_end"])
         cu = s["slot_user"][cslot]
-        c_inflight = s["inflight"].at[cu].add(-1)
-        stage_done = (s["pending"][cu] == 0) & (c_inflight[cu] == 0)
+        infl_cu = s["inflight"][cu] - 1
+        stage_done = (s["pending"][cu] == 0) & (infl_cu == 0)
         last_stage = s["phase"][cu] >= n_stages
         advance = stage_done & (~last_stage)
         job_done = stage_done & last_stage
         nxt = s["phase"][cu] + 1
-        c_phase = s["phase"].at[cu].set(
-            jnp.where(job_done, 0, jnp.where(advance, nxt, s["phase"][cu])))
-        c_pending = s["pending"].at[cu].set(
-            jnp.where(advance,
-                      n_tasks[jnp.clip(nxt - 1, 0, n_stages - 1)],
-                      s["pending"][cu]))
-        c_arrival = s["arrival"].at[cu].set(
-            jnp.where(advance, t_slot,
-                      jnp.where(job_done, INF, s["arrival"][cu])))
-        kq = jax.random.fold_in(key, i + fold_base)
-        c_think = s["think_end"].at[cu].set(
-            jnp.where(job_done,
-                      t_slot + jax.random.exponential(kq) * think_ms,
-                      s["think_end"][cu]))
         resp = t_slot - s["job_start"][cu]
         counted = job_done & (s["done_jobs"] >= warmup_jobs)
-        c_resp_sum = s["resp_sum"] + jnp.where(counted, resp, 0.0)
-        c_resp_cnt = s["resp_cnt"] + jnp.where(counted, 1.0, 0.0)
-        c_done = s["done_jobs"] + jnp.where(job_done, 1, 0)
-        c_slot_end = s["slot_end"].at[cslot].set(INF)
-        c_slot_user = s["slot_user"].at[cslot].set(-1)
 
-        tu = jnp.argmin(s["think_end"])
-        t_phase = s["phase"].at[tu].set(1)
-        t_pending = s["pending"].at[tu].set(n_tasks[0])
-        t_arrival = s["arrival"].at[tu].set(t_think)
-        t_jobstart = s["job_start"].at[tu].set(t_think)
-        t_think_end = s["think_end"].at[tu].set(INF)
+        # guarded scatters (one per array — see qn_sim._make_step): the
+        # branch picks the touched index and value; identity otherwise
+        sidx = jnp.where(b_dispatch, slot, cslot)
+        do_slot = b_dispatch | b_complete
+        se_val = jnp.where(b_dispatch, s["now"] + st, INF)
+        su_val = jnp.where(b_dispatch, u.astype(i32), i32(-1))
+        slot_end = s["slot_end"].at[sidx].set(
+            jnp.where(do_slot, se_val, s["slot_end"][sidx]))
+        slot_user = s["slot_user"].at[sidx].set(
+            jnp.where(do_slot, su_val, s["slot_user"][sidx]))
 
-        def sel(cur, d, c, t):
-            return jnp.where(b_dispatch, d,
-                             jnp.where(b_complete, c,
-                                       jnp.where(b_think, t, cur)))
+        uidx = jnp.where(b_dispatch, u,
+                         jnp.where(b_complete, cu.astype(u.dtype),
+                                   tu.astype(u.dtype)))
+        do_any = b_dispatch | b_complete | b_think
+        pending_val = jnp.where(
+            b_dispatch, s["pending"][u] - 1,
+            jnp.where(b_complete,
+                      jnp.where(advance,
+                                n_tasks[jnp.clip(nxt - 1, 0, n_stages - 1)],
+                                s["pending"][cu]),
+                      n_tasks[0]))
+        pending = s["pending"].at[uidx].set(
+            jnp.where(do_any, pending_val, s["pending"][uidx]))
+        inflight_val = jnp.where(b_dispatch, s["inflight"][u] + 1, infl_cu)
+        inflight = s["inflight"].at[uidx].set(
+            jnp.where(b_dispatch | b_complete, inflight_val,
+                      s["inflight"][uidx]))
+        phase_val = jnp.where(
+            b_complete,
+            jnp.where(job_done, 0, jnp.where(advance, nxt, s["phase"][cu])),
+            i32(1))
+        phase = s["phase"].at[uidx].set(
+            jnp.where(b_complete | b_think, phase_val, s["phase"][uidx]))
+        arrival_val = jnp.where(
+            b_complete,
+            jnp.where(advance, t_slot,
+                      jnp.where(job_done, INF, s["arrival"][cu])),
+            t_think)
+        arrival = s["arrival"].at[uidx].set(
+            jnp.where(b_complete | b_think, arrival_val, s["arrival"][uidx]))
+        think_val = jnp.where(
+            b_complete,
+            jnp.where(job_done, t_slot + td * think_ms, s["think_end"][cu]),
+            INF)
+        think_end = s["think_end"].at[uidx].set(
+            jnp.where(b_complete | b_think, think_val, s["think_end"][uidx]))
+        job_start = s["job_start"].at[tu].set(
+            jnp.where(b_think, t_think, s["job_start"][tu]))
 
-        new = dict(
-            now=sel(s["now"], s["now"], t_slot, t_think),
-            slot_end=sel(s["slot_end"], d_slot_end, c_slot_end,
-                         s["slot_end"]),
-            slot_user=sel(s["slot_user"], d_slot_user, c_slot_user,
-                          s["slot_user"]),
-            think_end=sel(s["think_end"], s["think_end"], c_think,
-                          t_think_end),
-            phase=sel(s["phase"], s["phase"], c_phase, t_phase),
-            pending=sel(s["pending"], d_pending, c_pending, t_pending),
-            inflight=sel(s["inflight"], d_inflight, c_inflight,
-                         s["inflight"]),
-            arrival=sel(s["arrival"], s["arrival"], c_arrival, t_arrival),
-            job_start=sel(s["job_start"], s["job_start"], s["job_start"],
-                          t_jobstart),
-            resp_sum=sel(s["resp_sum"], s["resp_sum"], c_resp_sum,
-                         s["resp_sum"]),
-            resp_cnt=sel(s["resp_cnt"], s["resp_cnt"], c_resp_cnt,
-                         s["resp_cnt"]),
-            done_jobs=sel(s["done_jobs"], s["done_jobs"], c_done,
-                          s["done_jobs"]),
-        )
-        return new, None
+        now = jnp.where(b_complete, t_slot,
+                        jnp.where(b_think, t_think, s["now"]))
+        resp_sum = s["resp_sum"] + jnp.where(b_complete & counted, resp, 0.0)
+        resp_cnt = s["resp_cnt"] + jnp.where(b_complete & counted, 1.0, 0.0)
+        done_jobs = s["done_jobs"] + jnp.where(b_complete & job_done, 1, 0)
 
-    state, _ = jax.lax.scan(step, state, jnp.arange(n_events))
+        return dict(now=now, slot_end=slot_end, slot_user=slot_user,
+                    think_end=think_end, phase=phase, pending=pending,
+                    inflight=inflight, arrival=arrival, job_start=job_start,
+                    resp_sum=resp_sum, resp_cnt=resp_cnt,
+                    done_jobs=done_jobs), None
+
+    state, _ = jax.lax.scan(step, state, (idx_e, sidx_t, sexp_t, td_t))
     return (state["resp_sum"] / jnp.maximum(state["resp_cnt"], 1.0),
             state["resp_cnt"])
 
@@ -259,8 +287,7 @@ def dag_replayer_lists(job: DagJob, runs: int = 20, seed: int = 100,
     return out
 
 
-def _pow2(n: int) -> int:
-    return 1 << max(int(n) - 1, 0).bit_length()
+_pow2 = _shapes.pow2
 
 
 def dag_events_needed(job: DagJob, min_jobs: int = 40,
@@ -295,8 +322,8 @@ def dag_response_time(job: DagJob, slots: int, think_ms: float,
     outs, cnts = [], []
     for r in range(replications):
         common = dict(h_users=h_users, n_stages=len(job.stages),
-                      max_slots=_pow2(slots), n_events=n_events,
-                      warmup_jobs=warmup_jobs)
+                      max_slots=_shapes.bucket_slots(slots),
+                      n_events=n_events, warmup_jobs=warmup_jobs)
         qn_sim._count_dispatch(events_total=n_events, events_useful=n_events)
         if samples is not None:
             m, c = _dag_sim_replay_jit(
@@ -313,7 +340,8 @@ def dag_response_time(job: DagJob, slots: int, think_ms: float,
 def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
                         h_users: int, min_jobs: int = 40,
                         warmup_jobs: int = 8, seed: int = 0,
-                        replications: int = 2, samples=None) -> np.ndarray:
+                        replications: int = 2, samples=None,
+                        defer: bool = False):
     """Batched ``dag_response_time``: ONE fused device dispatch for a whole
     candidate sweep of DAG configurations.
 
@@ -334,13 +362,24 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
     keys with the stage count so their batches satisfy it by
     construction).
 
+    Static axes (``max_slots``, lane count, stage-array length) are
+    quantized to ``repro.core.shapes`` buckets so nearby sweeps share one
+    compiled executable; bucket-induced padding is masked (value-invariant)
+    and accounted separately in ``qn_sim.padding_stats``.
+
+    With ``defer=True`` returns a ``qn_sim.PendingBatch`` immediately after
+    the (async) device dispatch instead of blocking on the transfer —
+    callers then coalesce many rounds into one
+    ``qn_sim.resolve_batches`` pull.
+
     Returns a float64 array of shape (C,) of mean response times [ms]
     (``inf`` where no replication completed a job).
     """
     jobs = list(jobs)
     C = len(jobs)
     if C == 0:
-        return np.zeros((0,), np.float64)
+        empty = np.zeros((0,), np.float64)
+        return qn_sim.PendingBatch.resolved(empty) if defer else empty
 
     def _b(x, dt):
         return np.broadcast_to(np.asarray(x, dt), (C,)).copy()
@@ -348,9 +387,11 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
     tk = _b(think_ms, np.float32)
     sl = _b(slots, np.int64)
     ks = [len(j.stages) for j in jobs]
-    K = max(ks)
     if samples is not None and len(set(ks)) != 1:
         raise ValueError("replay-mode DAG batches must share a stage count")
+    # Bucket the stage-array length: each lane clips to its own (traced)
+    # stage count, so padded stages are unreachable.
+    K = _shapes.bucket_stages(max(ks))
     nt = np.zeros((C, K), np.int32)
     ta = np.zeros((C, K), np.float32)
     for c, job in enumerate(jobs):
@@ -361,11 +402,11 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
                                            warmup_jobs=warmup_jobs)
                        for j in jobs], np.int64)
     scan_len = int(n_ev.max())
-    max_slots = _pow2(int(sl.max()))
+    max_slots = _shapes.bucket_slots(int(sl.max()))
 
-    # Pad the candidate axis to a power of two (replicating the last
-    # candidate) so sweeps of nearby widths share one compiled program.
-    C_pad = _pow2(C)
+    # Bucket the candidate axis (replicating the last candidate) so sweeps
+    # of nearby widths share one compiled program.
+    C_pad = _shapes.bucket_lanes(C)
     if C_pad > C:
         pad = lambda x: np.concatenate(
             [x, np.repeat(x[-1:], C_pad - C, axis=0)])
@@ -382,7 +423,9 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
     qn_sim._count_dispatch(
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
-        events_useful=int(n_ev[:C].sum()) * R)
+        events_useful=int(n_ev[:C].sum()) * R,
+        bucket_padded_lanes=(C_pad - C) * R,
+        bucket_padded_events=scan_len * (C_pad - C) * R)
     _span = _obs_trace.span("kernel:dag", cat="kernel", lanes=C_pad * R,
                             candidates=C, scan_len=scan_len,
                             replay=smp is not None)
@@ -394,13 +437,8 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
         jnp.asarray(rep(ns), jnp.int32), smp,
         h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
         warmup_jobs=warmup_jobs, has_samples=smp is not None)
-    mean = np.asarray(mean, np.float64).reshape(C_pad, R)[:C]
-    cnt = np.asarray(cnt, np.float64).reshape(C_pad, R)[:C]
-
-    out = np.full((C,), np.inf)
-    for c in range(C):      # same float64 combination as the scalar path
-        out[c] = qn_sim._combine(mean[c], cnt[c])[0]
-    return out
+    pending = qn_sim.PendingBatch(mean, cnt, C, R)
+    return pending if defer else pending.resolve()
 
 
 # --------------------------------------------------------------------------

@@ -128,7 +128,7 @@ def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
                   min_jobs: int = 40, warmup_jobs: int = 8,
                   replications: int = 2, seed: int = 0,
                   m_samples=None, r_samples=None,
-                  impl: Optional[str] = None) -> np.ndarray:
+                  impl: Optional[str] = None, defer: bool = False):
     """ONE fused simulator dispatch over heterogeneous points of a fusion
     group (shared ``h_users``, replay lists, and simulation parameters).
 
@@ -143,6 +143,10 @@ def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
     ``qn_sim.response_time`` call for the same point (the parity contract of
     ``response_time_batch``).  This is the single marshaling point both
     ``BatchedQNEvaluator`` and ``repro.service.scheduler`` dispatch through.
+
+    ``defer=True`` returns a ``qn_sim.PendingBatch`` right after the async
+    device dispatch; callers coalesce many groups into one
+    ``qn_sim.resolve_batches`` host sync.
     """
     return qn_sim.response_time_batch(
         n_map=np.asarray([p.n_map for p in profs], np.int64),
@@ -154,23 +158,24 @@ def fused_qn_call(profs: Sequence["object"], think_ms: Sequence[float],
         slots=np.asarray(slots, np.int64),
         min_jobs=min_jobs, warmup_jobs=warmup_jobs,
         seed=seed, replications=replications,
-        m_samples=m_samples, r_samples=r_samples, impl=impl)
+        m_samples=m_samples, r_samples=r_samples, impl=impl, defer=defer)
 
 
 def fused_dag_call(jobs: Sequence["object"], think_ms: Sequence[float],
                    h_users: int, slots: Sequence[int], *,
                    min_jobs: int = 40, warmup_jobs: int = 8,
                    replications: int = 2, seed: int = 0,
-                   samples=None) -> np.ndarray:
+                   samples=None, defer: bool = False):
     """DAG counterpart of ``fused_qn_call``: one fused dispatch of
     ``dag.response_time_batch`` over heterogeneous chain configurations
     (chains of different length pad to the batch-maximum stage count).
-    Each lane is bit-identical to a scalar ``dag_response_time`` call."""
+    Each lane is bit-identical to a scalar ``dag_response_time`` call.
+    ``defer`` as in ``fused_qn_call``."""
     return dag_mod.response_time_batch(
         jobs, think_ms=np.asarray(think_ms, np.float32),
         slots=np.asarray(slots, np.int64), h_users=int(h_users),
         min_jobs=min_jobs, warmup_jobs=warmup_jobs,
-        seed=seed, replications=replications, samples=samples)
+        seed=seed, replications=replications, samples=samples, defer=defer)
 
 
 def fused_eval_call(kind: str, profs: Sequence["object"],
@@ -178,7 +183,7 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
                     slots: Sequence[int], *, min_jobs: int = 40,
                     warmup_jobs: int = 8, replications: int = 2,
                     seed: int = 0, samples=None,
-                    impl: Optional[str] = None) -> np.ndarray:
+                    impl: Optional[str] = None, defer: bool = False):
     """Workload dispatch of a fusion group: route MapReduce windows to
     ``fused_qn_call`` and DAG windows to ``fused_dag_call``.  ``samples``
     is the group-shared replay payload in the kind's native form (an
@@ -186,9 +191,11 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
     marshaling point both ``BatchedQNEvaluator`` and the service's
     ``FusionScheduler`` dispatch through.  ``impl`` selects the MapReduce
     simulator backend (see ``fused_qn_call``); the DAG route has a single
-    implementation and ignores it."""
+    implementation and ignores it.  With ``defer=True`` the span covers
+    the (async) dispatch only, and a ``qn_sim.PendingBatch`` is returned
+    for a later coalesced ``resolve_batches``."""
     kw = dict(min_jobs=min_jobs, warmup_jobs=warmup_jobs,
-              replications=replications, seed=seed)
+              replications=replications, seed=seed, defer=defer)
     with _obs_trace.span("fused_dispatch", cat="fusion", kind=kind,
                          points=len(profs), h_users=int(h_users),
                          replay=samples is not None):
@@ -280,22 +287,30 @@ class BatchedQNEvaluator:
                 # pad freely and fuse across chain lengths)
                 group_key += (len(prof.stages),)
             todo.setdefault(group_key, []).append(idx)
+        # Two-phase round: dispatch every group's device program first
+        # (JAX async dispatch — marshaling group k+1 overlaps the device
+        # executing group k), then resolve ALL results with one host sync.
+        inflight: List[Tuple[list, "qn_sim.PendingBatch"]] = []
         for group_key, idxs in todo.items():
             kind, h_users, replay = group_key[:3]
             smp = self.samples[replay] if replay is not None else None
-            ts = fused_eval_call(
+            pending = fused_eval_call(
                 kind, [profs[i] for i in idxs],
                 [items[i][0].think_ms for i in idxs],
                 h_users,
                 [int(items[i][2]) * items[i][1].slots for i in idxs],
                 min_jobs=self.min_jobs, warmup_jobs=self.warmup_jobs,
                 seed=self.seed, replications=self.replications,
-                samples=smp, impl=self.impl)
-            for i, t in zip(idxs, ts):
-                self.cache[keys[i]] = float(t)
+                samples=smp, impl=self.impl, defer=True)
+            inflight.append((idxs, pending))
             with self._counter_lock:
                 self.device_calls += 1
                 self.points_evaluated += len(idxs)
+        if inflight:
+            results = qn_sim.resolve_batches(p for _, p in inflight)
+            for (idxs, _), ts in zip(inflight, results):
+                for i, t in zip(idxs, ts):
+                    self.cache[keys[i]] = float(t)
         return [self.cache[k] for k in keys]
 
     # --------------------------------------------------- scalar-compatible

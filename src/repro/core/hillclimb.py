@@ -144,14 +144,23 @@ def sweep_requests(cls: ApplicationClass, vm: VMType, nu0: int, *,
         aborting after ``stall_windows`` consecutive windows whose best
         response time improves by <0.5% (response floored above deadline —
         no cluster size will help).
+
+    The first window descends from the seed — ``[nu0-window+1, nu0]`` —
+    because analytic seeds over-provision by construction (the MVA/AMVA
+    response bounds are conservative, so the true minimum sits at or below
+    the analytic one): anchoring at the seed's upper edge captures the
+    whole overshoot in one round where a centered window would spend half
+    its points above a nu that is already known feasible.  An undershooting
+    seed (possible under simulation noise) still converges through the
+    ordinary slide-up path, one round later.
     """
     t_start = time.time()
     tr = trace if trace is not None else HCTrace(cls=cls.name)
     window = max(2, window)
 
     nu0 = min(max(1, nu0), max_nu)     # an out-of-catalog incumbent would
-    lo = max(1, nu0 - window // 2)     # otherwise make the window empty
-    hi = min(max_nu, lo + window - 1)
+    hi = min(max_nu, nu0)              # otherwise make the window empty
+    lo = max(1, hi - window + 1)
     best: Optional[Tuple[int, float]] = None   # feasible incumbent
     prev_floor = float("inf")
     stall = 0

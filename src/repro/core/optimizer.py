@@ -61,6 +61,7 @@ from repro.core.hillclimb import HCTrace, hill_climb, race_class, \
 from repro.core.milp import rank_vm_types
 from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
     VMType, solution_cost
+from repro.obs import compile as _obs_compile
 from repro.obs import trace as _obs_trace
 
 
@@ -105,18 +106,33 @@ class RunReport:
         }, indent=1)
 
 
+def _snapshot() -> Dict[str, Dict[str, int]]:
+    """Counter snapshot at gait start: simulator dispatch stats plus the
+    XLA compile split (``repro.obs.compile``) — ``_report`` turns the pair
+    of snapshots into per-run deltas."""
+    return {"qn": qn_sim.sim_stats(),
+            "compile": _obs_compile.compile_stats()}
+
+
 def _report(sols: Dict[str, ClassSolution], traces: Dict[str, HCTrace],
             init: Dict[str, ClassSolution], t0: float,
-            qn0: Dict[str, int]) -> RunReport:
+            snap0: Dict[str, Dict[str, int]]) -> RunReport:
     """Shared epilogue of every gait: one place assembles the report, so
-    all entry points stay consistent on metadata/accounting.  ``qn0`` is
-    the ``qn_sim.sim_stats()`` snapshot taken at run start; the report's
-    ``telemetry`` carries the run's deltas (and, when a tracer is
-    installed, the span summary so far — spans still open at report time,
-    e.g. the driver's own ``solve`` span, close after it)."""
+    all entry points stay consistent on metadata/accounting.  ``snap0`` is
+    the ``_snapshot()`` taken at run start; the report's ``telemetry``
+    carries the run's deltas — simulator dispatches under ``"qn"`` and the
+    compile-vs-execute split under ``"compile"`` (``compile_ms`` out of
+    ``wall_s`` is compilation; the rest is execute + host time) — and,
+    when a tracer is installed, the span summary so far (spans still open
+    at report time, e.g. the driver's own ``solve`` span, close after
+    it)."""
+    qn0 = snap0.get("qn", {})
     qn1 = qn_sim.sim_stats()
     qn_delta = {k: qn1[k] - qn0.get(k, 0) for k in qn1}
-    telemetry = {"qn": qn_delta}
+    c0 = snap0.get("compile", {})
+    c1 = _obs_compile.compile_stats()
+    telemetry = {"qn": qn_delta,
+                 "compile": {k: c1[k] - c0.get(k, 0) for k in c1}}
     tracer = _obs_trace.active()
     if tracer is not None:
         telemetry["spans"] = tracer.summary()
@@ -213,7 +229,7 @@ class DSpace4Cloud:
         service-level dispatch accounting.
         """
         t0 = time.time()
-        qn0 = qn_sim.sim_stats()
+        qn0 = _snapshot()
         ranking = self._ranking()
         init = {name: cands[0] for name, cands in ranking.items()}
         racers: Dict[str, object] = {}
@@ -284,7 +300,7 @@ class DSpace4Cloud:
             with _obs_trace.span("solve", cat="solve", mode="pointwise",
                                  classes=len(self.problem.classes)):
                 t0 = time.time()
-                qn0 = qn_sim.sim_stats()
+                qn0 = _snapshot()
                 init = {name: cands[0]
                         for name, cands in self._ranking().items()}
                 sols, hc_traces = hill_climb(self.problem, init,
@@ -349,7 +365,7 @@ class DSpace4Cloud:
         fusion group — 2-3 per class total, catalog-wide (see
         results/BENCH_hc_convergence.json / BENCH_vm_race.json)."""
         t0 = time.time()
-        qn0 = qn_sim.sim_stats()
+        qn0 = _snapshot()
         with _obs_trace.span("solve", cat="solve", mode="fast",
                              classes=len(self.problem.classes)):
             ranking = self._ranking()

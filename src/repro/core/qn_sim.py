@@ -32,8 +32,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import shapes as _shapes
+from repro.obs import compile as _obs_compile
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs_trace
+
+# Compile observability (qn.compiles / qn.compile_ms) + the env-gated
+# persistent compilation cache must be live before the first jit of any
+# entry point that simulates — importing this module is that point.
+_obs_compile.install()
 
 INF = jnp.float32(1e30)
 _PRIO = jnp.float32(1e15)       # added to map-stage keys: reduce dispatches first
@@ -70,34 +77,69 @@ def _init_state(key, think_ms, h_users: int, max_slots: int):
         done_jobs=jnp.int32(0))
 
 
-def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
-               max_slots: int, n_events: int, warmup_jobs: int,
-               m_samples=None, r_samples=None, n_events_active=None):
-    """``m_samples``/``r_samples``: optional empirical task-duration lists —
-    the JMT *replayer* mode the paper uses (service times drawn from logged
-    durations instead of exponentials).
+def _rng_tables(key, n_events: int, fold_base,
+                m_samples=None, r_samples=None):
+    """Hoist the per-event RNG out of the scan: every draw is a pure
+    function of ``(key, i)``, so precomputing the whole (n_events,) stream
+    in one vectorized pass produces bit-for-bit the values the old
+    in-loop ``fold_in`` calls drew — while removing two threefry hashes
+    from every scan step (the dominant per-step cost on CPU).
+
+    Returns ``(st_m, st_r, td)``: the map/reduce service draw per event
+    (replay mode gathers the sampled durations; exponential mode returns
+    the unit-exponential draw in both, scaled by the profile mean inside
+    the step) and the unit-exponential think redraw (fold offset
+    ``i + fold_base`` — the *logical* budget, part of the values)."""
+    idx = jnp.arange(n_events)
+
+    def service(i):
+        key_i = jax.random.fold_in(key, i)
+        if m_samples is not None:
+            idx_m = jax.random.randint(key_i, (), 0, m_samples.shape[0])
+            idx_r = jax.random.randint(key_i, (), 0, r_samples.shape[0])
+            return m_samples[idx_m], r_samples[idx_r]
+        e = jax.random.exponential(key_i)
+        return e, e
+
+    def think(i):
+        return jax.random.exponential(jax.random.fold_in(key, i + fold_base))
+
+    st_m, st_r = jax.vmap(service)(idx)
+    return st_m, st_r, jax.vmap(think)(idx)
+
+
+def _make_step(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
+               max_slots: int, warmup_jobs: int,
+               replay: bool = False, n_events_active=None):
+    """One event per step — dispatch one task / complete one task / end one
+    think.  The step consumes ``xs = (i, st_m, st_r, td)`` from the
+    precomputed RNG tables (``_rng_tables``) and applies every state change
+    as a single *guarded scatter* per array (branch-selected index +
+    branch-selected value, identity when no branch fires) instead of
+    materializing three full candidate states and ``where``-chaining them —
+    same values, roughly half the per-step op count.
 
     ``n_events_active``: optional traced per-config event budget.  The scan
     length stays static (padded across a batch), but steps with
-    ``i >= n_events_active`` become no-ops and the completion-key fold offset
+    ``i >= n_events_active`` become no-ops and the think-redraw fold offset
     uses the *logical* budget — so a config padded inside a batch produces
     bit-for-bit the random stream of a scalar run with ``n_events`` equal to
     its own logical budget."""
     slot_enabled = jnp.arange(max_slots) < slots_cap
-    replay = m_samples is not None
-    fold_base = n_events if n_events_active is None else n_events_active
+    i32 = jnp.int32
 
-    def step(state, i):
-        s = state
-        free_slot = jnp.any((s["slot_user"] < 0) & slot_enabled)
-        has_pending = jnp.any(s["pending"] > 0)
-        b_dispatch = free_slot & has_pending
+    def step(s, xs):
+        i, st_m, st_r, td = xs
 
-        # ---------------- dispatch one task --------------------------------
+        # ---------------- choose the event ---------------------------------
+        avail = (s["slot_user"] < 0) & slot_enabled
+        slot = jnp.argmax(avail)           # first free slot (if any)
+        free_slot = avail[slot]
+        b_dispatch = free_slot & jnp.any(s["pending"] > 0)
+
         # Reduce priority, FIFO-by-wave-arrival within a priority level.
         # Two-level lexicographic selection (NOT arrival+BIG in one float:
         # f32 resolution at 1e15 collapses all arrivals and starves users).
-        key_i = jax.random.fold_in(key, i)
         red_key = jnp.where((s["pending"] > 0) & (s["phase"] == 2),
                             s["arrival"], INF)
         map_key = jnp.where((s["pending"] > 0) & (s["phase"] == 1),
@@ -105,22 +147,14 @@ def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
         has_red = jnp.min(red_key) < INF
         u = jnp.where(has_red, jnp.argmin(red_key), jnp.argmin(map_key))
         if replay:
-            idx_m = jax.random.randint(key_i, (), 0, m_samples.shape[0])
-            idx_r = jax.random.randint(key_i, (), 0, r_samples.shape[0])
-            st = jnp.where(s["phase"][u] == 1,
-                           m_samples[idx_m], r_samples[idx_r])
+            st = jnp.where(s["phase"][u] == 1, st_m, st_r)
         else:
-            mean = jnp.where(s["phase"][u] == 1, m_avg, r_avg)
-            st = jax.random.exponential(key_i) * mean
-        slot = jnp.argmax((s["slot_user"] < 0) & slot_enabled)
-        d_slot_end = s["slot_end"].at[slot].set(s["now"] + st)
-        d_slot_user = s["slot_user"].at[slot].set(u.astype(jnp.int32))
-        d_pending = s["pending"].at[u].add(-1)
-        d_inflight = s["inflight"].at[u].add(1)
+            st = st_m * jnp.where(s["phase"][u] == 1, m_avg, r_avg)
 
-        # ---------------- or advance time ----------------------------------
-        t_slot = jnp.min(s["slot_end"])
-        t_think = jnp.min(s["think_end"])
+        cslot = jnp.argmin(s["slot_end"])  # next completion (if any)
+        t_slot = s["slot_end"][cslot]
+        tu = jnp.argmin(s["think_end"])    # next think end (if any)
+        t_think = s["think_end"][tu]
         b_complete = (~b_dispatch) & (t_slot <= t_think) & (t_slot < INF)
         b_think = (~b_dispatch) & (~b_complete) & (t_think < INF)
         if n_events_active is not None:          # padded batch: mask tail
@@ -129,70 +163,81 @@ def _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
             b_complete = b_complete & active
             b_think = b_think & active
 
-        # completion
-        cslot = jnp.argmin(s["slot_end"])
+        # ---------------- completion bookkeeping ---------------------------
         cu = s["slot_user"][cslot]
-        c_inflight = s["inflight"].at[cu].add(-1)
-        stage_done = (s["pending"][cu] == 0) & (c_inflight[cu] == 0)
+        infl_cu = s["inflight"][cu] - 1
+        stage_done = (s["pending"][cu] == 0) & (infl_cu == 0)
         was_map = s["phase"][cu] == 1
-        # map stage done -> fork reduce (outside FCR)
-        c_phase = s["phase"].at[cu].set(
-            jnp.where(stage_done, jnp.where(was_map, 2, 0), s["phase"][cu]))
-        c_pending = s["pending"].at[cu].set(
-            jnp.where(stage_done & was_map, n_reduce, s["pending"][cu]))
-        c_arrival = s["arrival"].at[cu].set(
-            jnp.where(stage_done & was_map, t_slot, s["arrival"][cu]))
-        # reduce stage done -> job completes, back to think
-        job_done = stage_done & (~was_map)
+        job_done = stage_done & (~was_map)      # reduce done -> job done
         resp = t_slot - s["job_start"][cu]
-        kq = jax.random.fold_in(key, i + fold_base)
-        new_think = t_slot + jax.random.exponential(kq) * think_ms
-        c_think = s["think_end"].at[cu].set(
-            jnp.where(job_done, new_think, s["think_end"][cu]))
-        c_arrival = c_arrival.at[cu].set(
-            jnp.where(job_done, INF, c_arrival[cu]))
+        new_think = t_slot + td * think_ms
         counted = job_done & (s["done_jobs"] >= warmup_jobs)
-        c_resp_sum = s["resp_sum"] + jnp.where(counted, resp, 0.0)
-        c_resp_cnt = s["resp_cnt"] + jnp.where(counted, 1.0, 0.0)
-        c_done = s["done_jobs"] + jnp.where(job_done, 1, 0)
-        c_slot_end = s["slot_end"].at[cslot].set(INF)
-        c_slot_user = s["slot_user"].at[cslot].set(-1)
 
-        # think end -> submit job (fork maps)
-        tu = jnp.argmin(s["think_end"])
-        t_phase = s["phase"].at[tu].set(1)
-        t_pending = s["pending"].at[tu].set(n_map)
-        t_arrival = s["arrival"].at[tu].set(t_think)
-        t_jobstart = s["job_start"].at[tu].set(t_think)
-        t_think_end = s["think_end"].at[tu].set(INF)
+        # ---------------- guarded scatters ---------------------------------
+        # slot arrays: dispatch writes (now+st, u) at the free slot,
+        # completion writes (INF, -1) at the completing slot
+        sidx = jnp.where(b_dispatch, slot, cslot)
+        do_slot = b_dispatch | b_complete
+        se_val = jnp.where(b_dispatch, s["now"] + st, INF)
+        su_val = jnp.where(b_dispatch, u.astype(i32), i32(-1))
+        slot_end = s["slot_end"].at[sidx].set(
+            jnp.where(do_slot, se_val, s["slot_end"][sidx]))
+        slot_user = s["slot_user"].at[sidx].set(
+            jnp.where(do_slot, su_val, s["slot_user"][sidx]))
 
-        def sel(cur, d, c, t):
-            return jnp.where(
-                b_dispatch, d,
-                jnp.where(b_complete, c, jnp.where(b_think, t, cur)))
+        # user arrays: dispatch touches u, completion touches cu (map stage
+        # done -> fork reduce outside the FCR; reduce done -> back to think),
+        # think end touches tu (submit job: fork maps)
+        uidx = jnp.where(b_dispatch, u,
+                         jnp.where(b_complete, cu.astype(u.dtype),
+                                   tu.astype(u.dtype)))
+        do_any = b_dispatch | b_complete | b_think
+        pending_val = jnp.where(
+            b_dispatch, s["pending"][u] - 1,
+            jnp.where(b_complete,
+                      jnp.where(stage_done & was_map, n_reduce,
+                                s["pending"][cu]),
+                      n_map))
+        pending = s["pending"].at[uidx].set(
+            jnp.where(do_any, pending_val, s["pending"][uidx]))
+        inflight_val = jnp.where(b_dispatch, s["inflight"][u] + 1, infl_cu)
+        inflight = s["inflight"].at[uidx].set(
+            jnp.where(b_dispatch | b_complete, inflight_val,
+                      s["inflight"][uidx]))
+        phase_val = jnp.where(
+            b_complete,
+            jnp.where(stage_done, jnp.where(was_map, i32(2), i32(0)),
+                      s["phase"][cu]),
+            i32(1))
+        phase = s["phase"].at[uidx].set(
+            jnp.where(b_complete | b_think, phase_val, s["phase"][uidx]))
+        arrival_val = jnp.where(
+            b_complete,
+            jnp.where(job_done, INF,
+                      jnp.where(stage_done & was_map, t_slot,
+                                s["arrival"][cu])),
+            t_think)
+        arrival = s["arrival"].at[uidx].set(
+            jnp.where(b_complete | b_think, arrival_val, s["arrival"][uidx]))
+        think_val = jnp.where(
+            b_complete, jnp.where(job_done, new_think, s["think_end"][cu]),
+            INF)
+        think_end = s["think_end"].at[uidx].set(
+            jnp.where(b_complete | b_think, think_val, s["think_end"][uidx]))
+        job_start = s["job_start"].at[tu].set(
+            jnp.where(b_think, t_think, s["job_start"][tu]))
 
-        new = dict(
-            now=sel(s["now"], s["now"], t_slot, t_think),
-            slot_end=sel(s["slot_end"], d_slot_end, c_slot_end, s["slot_end"]),
-            slot_user=sel(s["slot_user"], d_slot_user, c_slot_user,
-                          s["slot_user"]),
-            think_end=sel(s["think_end"], s["think_end"], c_think,
-                          t_think_end),
-            phase=sel(s["phase"], s["phase"], c_phase, t_phase),
-            pending=sel(s["pending"], d_pending, c_pending, t_pending),
-            inflight=sel(s["inflight"], d_inflight, c_inflight,
-                         s["inflight"]),
-            arrival=sel(s["arrival"], s["arrival"], c_arrival, t_arrival),
-            job_start=sel(s["job_start"], s["job_start"], s["job_start"],
-                          t_jobstart),
-            resp_sum=sel(s["resp_sum"], s["resp_sum"], c_resp_sum,
-                         s["resp_sum"]),
-            resp_cnt=sel(s["resp_cnt"], s["resp_cnt"], c_resp_cnt,
-                         s["resp_cnt"]),
-            done_jobs=sel(s["done_jobs"], s["done_jobs"], c_done,
-                          s["done_jobs"]),
-        )
-        return new, None
+        now = jnp.where(b_complete, t_slot,
+                        jnp.where(b_think, t_think, s["now"]))
+        resp_sum = s["resp_sum"] + jnp.where(b_complete & counted, resp, 0.0)
+        resp_cnt = s["resp_cnt"] + jnp.where(b_complete & counted, 1.0, 0.0)
+        done_jobs = s["done_jobs"] + jnp.where(b_complete & job_done, 1, 0)
+
+        return dict(now=now, slot_end=slot_end, slot_user=slot_user,
+                    think_end=think_end, phase=phase, pending=pending,
+                    inflight=inflight, arrival=arrival, job_start=job_start,
+                    resp_sum=resp_sum, resp_cnt=resp_cnt,
+                    done_jobs=done_jobs), None
 
     return step
 
@@ -201,14 +246,21 @@ def _sim(n_map, n_reduce, m_avg, r_avg, think_ms, slots_cap,
          h_users: int, max_slots: int, n_events: int, warmup_jobs: int,
          seed, m_samples=None, r_samples=None, n_events_active=None):
     """Core simulator.  Static: h_users, max_slots, n_events, warmup_jobs.
-    Traced: everything else (so configs can be vmapped)."""
+    Traced: everything else (so configs can be vmapped).
+
+    ``m_samples``/``r_samples``: optional empirical task-duration lists —
+    the JMT *replayer* mode the paper uses (service times drawn from logged
+    durations instead of exponentials)."""
     key = jax.random.key(seed)
     state = _init_state(key, think_ms, h_users, max_slots)
-    step = _make_step(key, n_map, n_reduce, m_avg, r_avg, think_ms,
-                      slots_cap, max_slots, n_events, warmup_jobs,
-                      m_samples=m_samples, r_samples=r_samples,
+    fold_base = n_events if n_events_active is None else n_events_active
+    tables = _rng_tables(key, n_events, fold_base,
+                         m_samples=m_samples, r_samples=r_samples)
+    step = _make_step(n_map, n_reduce, m_avg, r_avg, think_ms,
+                      slots_cap, max_slots, warmup_jobs,
+                      replay=m_samples is not None,
                       n_events_active=n_events_active)
-    state, _ = jax.lax.scan(step, state, jnp.arange(n_events))
+    state, _ = jax.lax.scan(step, state, (jnp.arange(n_events),) + tables)
     mean_resp = state["resp_sum"] / jnp.maximum(state["resp_cnt"], 1.0)
     return mean_resp, state["resp_cnt"]
 
@@ -305,22 +357,53 @@ _SIM_STAT_KEYS = ("dispatches", "lanes", "padded_lanes",
                   "events_total", "events_useful")
 _REG = _obs_metrics.registry()
 _QN_COUNTERS = {k: _REG.counter(f"qn.{k}") for k in _SIM_STAT_KEYS}
+# Bucket-induced padding, tracked SEPARATELY from batch padding: a padded
+# lane exists because the lane-count grid rounded the candidate axis up
+# (shapes.bucket_lanes), while events_total - events_useful additionally
+# contains real lanes scanned past their own logical budget (batch
+# padding).  ``padding_stats()`` splits the two so efficiency reports
+# don't conflate them.
+_QN_BUCKET = {k: _REG.counter(f"qn.bucket_{k}") for k in
+              ("padded_lanes", "padded_events")}
 _QN_WASTE = _REG.gauge(
     "qn.padded_waste_ratio",
     help="1 - events_useful/events_total over process lifetime")
 
 
 def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
-                    events_total: int = 0, events_useful: int = 0) -> None:
+                    events_total: int = 0, events_useful: int = 0,
+                    bucket_padded_lanes: int = 0,
+                    bucket_padded_events: int = 0) -> None:
     with _REG.lock:
         _QN_COUNTERS["dispatches"].inc(n)
         _QN_COUNTERS["lanes"].inc(n if lanes is None else lanes)
         _QN_COUNTERS["padded_lanes"].inc(padded_lanes)
         _QN_COUNTERS["events_total"].inc(events_total)
         _QN_COUNTERS["events_useful"].inc(events_useful)
+        _QN_BUCKET["padded_lanes"].inc(bucket_padded_lanes)
+        _QN_BUCKET["padded_events"].inc(bucket_padded_events)
         tot = _QN_COUNTERS["events_total"].value
         if tot:
             _QN_WASTE.set(1.0 - _QN_COUNTERS["events_useful"].value / tot)
+
+
+def padding_stats() -> dict:
+    """Split of the padding overhead: ``bucket_padded_lanes`` /
+    ``bucket_padded_events`` are the lanes (and their scan events) that
+    exist only because of lane-grid rounding; ``batch_padded_events`` is
+    the remainder of ``events_total - events_useful`` — real lanes scanned
+    past their own logical budget to the batch maximum.  All counters
+    cover every workload kind (the DAG batch reports here too) and reset
+    with ``reset_sim_stats``."""
+    with _REG.lock:
+        total = _QN_COUNTERS["events_total"].value
+        useful = _QN_COUNTERS["events_useful"].value
+        b_lanes = _QN_BUCKET["padded_lanes"].value
+        b_events = _QN_BUCKET["padded_events"].value
+        return {"bucket_padded_lanes": b_lanes,
+                "bucket_padded_events": b_events,
+                "batch_padded_events": total - useful - b_events,
+                "events_total": total, "events_useful": useful}
 
 
 def dispatch_count() -> int:
@@ -350,14 +433,15 @@ def reset_sim_stats() -> None:
     with _REG.lock:
         for c in _QN_COUNTERS.values():
             c.reset()
+        for c in _QN_BUCKET.values():
+            c.reset()
         _QN_WASTE.reset()
 
 
 reset_dispatch_count = reset_sim_stats
 
 
-def _pow2(n: int) -> int:
-    return 1 << max(int(n) - 1, 0).bit_length()
+_pow2 = _shapes.pow2
 
 
 def _combine(means, cnts) -> Tuple[float, float]:
@@ -378,12 +462,13 @@ def _combine(means, cnts) -> Tuple[float, float]:
 def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
     """Returns (mean response [ms], total completed jobs counted).
 
-    ``max_slots`` and ``n_events`` are bucketed to powers of two so the hill
+    ``max_slots`` is bucketed to the geometric shape grid and ``n_events``
+    to its pow2 logical-budget grid (``repro.core.shapes``) so the hill
     climber's slot sweeps hit the jit cache instead of recompiling."""
     outs = []
     cnts = []
     for r in range(replications):
-        ne = _pow2(p.n_events)
+        ne = _shapes.bucket_events(p.n_events)
         _count_dispatch(events_total=ne, events_useful=ne)
         with _obs_trace.span("kernel:scalar", cat="kernel", events=ne):
             m, c = _sim_jit(
@@ -391,7 +476,7 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
                 jnp.float32(p.m_avg), jnp.float32(p.r_avg),
                 jnp.float32(p.think_ms), jnp.int32(p.slots),
                 p.seed + 1000 * r,
-                h_users=p.h_users, max_slots=_pow2(p.slots),
+                h_users=p.h_users, max_slots=_shapes.bucket_slots(p.slots),
                 n_events=ne, warmup_jobs=p.warmup_jobs)
         outs.append(float(m))
         cnts.append(float(c))
@@ -438,7 +523,7 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
     rs = jnp.asarray(np.asarray(r_samples, np.float32))
     outs, cnts = [], []
     for r in range(replications):
-        ne = _pow2(p.n_events)
+        ne = _shapes.bucket_events(p.n_events)
         _count_dispatch(events_total=ne, events_useful=ne)
         with _obs_trace.span("kernel:scalar", cat="kernel", events=ne,
                              replay=True):
@@ -446,10 +531,65 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
                 jnp.int32(p.n_map), jnp.int32(p.n_reduce),
                 jnp.float32(p.think_ms), jnp.int32(p.slots),
                 p.seed + 1000 * r,
-                ms, rs, h_users=p.h_users, max_slots=_pow2(p.slots),
-                n_events=_pow2(p.n_events), warmup_jobs=p.warmup_jobs)
+                ms, rs, h_users=p.h_users,
+                max_slots=_shapes.bucket_slots(p.slots),
+                n_events=ne, warmup_jobs=p.warmup_jobs)
         outs.append(float(m)); cnts.append(float(c))
     return _combine(outs, cnts)[0]
+
+
+class PendingBatch:
+    """Handle to an in-flight batched dispatch (JAX async dispatch): the
+    device arrays are captured un-synced, so the caller can issue further
+    dispatches — or do host-side bookkeeping — while the device executes.
+    ``resolve()`` performs the one host sync (``jax.device_get``) and the
+    float64 per-candidate combination; ``resolve_batches`` syncs MANY
+    handles in a single ``device_get`` (the per-round coalescing point of
+    ``scheduler.flush`` and ``BatchedQNEvaluator.evaluate_many``).
+    Resolution is memoized, and the resolved values are identical to what
+    the blocking call would have returned."""
+
+    def __init__(self, mean, cnt, C: int, R: int):
+        self._mean, self._cnt = mean, cnt
+        self._C, self._R = C, R
+        self._out: "np.ndarray | None" = None
+
+    def _finish(self, mean, cnt) -> np.ndarray:
+        if self._out is None:
+            C, R = self._C, self._R
+            mean = np.asarray(mean, np.float64).reshape(-1, R)[:C]
+            cnt = np.asarray(cnt, np.float64).reshape(-1, R)[:C]
+            out = np.full((C,), np.inf)
+            for c in range(C):   # same float64 combination as the scalar path
+                out[c] = _combine(mean[c], cnt[c])[0]
+            self._out = out
+            self._mean = self._cnt = None      # free the device buffers
+        return self._out
+
+    def resolve(self) -> np.ndarray:
+        if self._out is None:
+            return self._finish(*jax.device_get((self._mean, self._cnt)))
+        return self._out
+
+    @classmethod
+    def resolved(cls, out) -> "PendingBatch":
+        """A pre-resolved handle (empty batches, cache hits)."""
+        pb = cls(None, None, 0, 1)
+        pb._out = np.asarray(out, np.float64)
+        return pb
+
+
+def resolve_batches(batches) -> list:
+    """Resolve many ``PendingBatch`` handles with ONE ``jax.device_get``
+    (one host sync per scheduling round instead of one per fusion group).
+    Already-resolved handles are passed through."""
+    batches = list(batches)
+    todo = [b for b in batches if b._out is None]
+    if todo:
+        fetched = jax.device_get([(b._mean, b._cnt) for b in todo])
+        for b, (m, c) in zip(todo, fetched):
+            b._finish(m, c)
+    return [b._out for b in batches]
 
 
 def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
@@ -457,7 +597,7 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
                         warmup_jobs: int = 10, seed: int = 0,
                         replications: int = 2,
                         m_samples=None, r_samples=None,
-                        impl: str = None) -> np.ndarray:
+                        impl: str = None, defer: bool = False):
     """Batched ``response_time``: one fused device dispatch for a whole
     candidate sweep.
 
@@ -480,8 +620,15 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     interpret mode); ``None`` uses the process default (``default_impl``).
     Dispatch/lane accounting is identical for every impl.
 
+    Static jit axes (``max_slots``, the candidate axis) are quantized to
+    the geometric shape grid (``repro.core.shapes``), so nearby sweeps
+    share one compiled executable; bucket-induced padding is counted
+    separately from batch padding (``padding_stats``).
+
     Returns a float64 array of shape (C,) of mean response times [ms]
-    (``inf`` where no replication completed a job).
+    (``inf`` where no replication completed a job) — or, with
+    ``defer=True``, a ``PendingBatch`` handle that resolves to exactly
+    that array without blocking the caller on the device.
     """
     sim_fn = _batch_sim_fn(impl)
     shape = np.broadcast_shapes(*(np.shape(np.asarray(x)) for x in
@@ -507,13 +654,13 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
                                       min_jobs=min_jobs,
                                       warmup_jobs=warmup_jobs)
     scan_len = int(n_ev.max())
-    max_slots = _pow2(int(sl.max()))
+    max_slots = _shapes.bucket_slots(int(sl.max()))
 
-    # Pad the candidate axis to a power of two (replicating the last
+    # Pad the candidate axis to the lane grid (replicating the last
     # candidate) so sweeps of nearby widths share one compiled program —
     # vmap lanes are independent, so results for real candidates are
     # unchanged; padded lanes are dropped below.
-    C_pad = _pow2(C)
+    C_pad = _shapes.bucket_lanes(C)
     if C_pad > C:
         pad = lambda x: np.concatenate(
             [x, np.repeat(x[-1:], C_pad - C, axis=0)])
@@ -535,7 +682,9 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     _count_dispatch(
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
-        events_useful=int(n_ev[:C].sum()) * R)
+        events_useful=int(n_ev[:C].sum()) * R,
+        bucket_padded_lanes=(C_pad - C) * R,
+        bucket_padded_events=scan_len * (C_pad - C) * R)
     with _obs_trace.span(f"kernel:{impl or default_impl()}", cat="kernel",
                          lanes=C_pad * R, candidates=C,
                          scan_len=scan_len, replay=ms is not None):
@@ -546,10 +695,5 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
             jnp.asarray(rep(n_ev), jnp.int32), ms, rs,
             h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
             warmup_jobs=warmup_jobs)
-    mean = np.asarray(mean, np.float64).reshape(C_pad, R)[:C]
-    cnt = np.asarray(cnt, np.float64).reshape(C_pad, R)[:C]
-
-    out = np.full((C,), np.inf)
-    for c in range(C):      # same float64 combination as the scalar path
-        out[c] = _combine(mean[c], cnt[c])[0]
-    return out
+    pending = PendingBatch(mean, cnt, C, R)
+    return pending if defer else pending.resolve()

@@ -11,13 +11,27 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import shapes as _shapes
 from repro.kernels.amva import kernel
 from repro.obs import trace as _obs_trace
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _bucket_args(n: int, args):
+    """Pad every (N,) operand to the lane bucket by replicating its last
+    element.  Lanes are independent fixed points, so the replicas converge
+    to the same value as the original and are sliced off on the way out —
+    nearby frontier widths then share one compiled executable."""
+    n_pad = _shapes.bucket_lanes(n) - n
+    if n_pad == 0:
+        return args
+    return tuple(jnp.concatenate(
+        [x, jnp.broadcast_to(x[-1:], (n_pad,) + x.shape[1:])]) for x in args)
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -29,10 +43,16 @@ def _ps_fixed_point_jit(a_over_c, b, think, h_users,
 
 
 def ps_fixed_point(a_over_c, b, think, h_users, iters: int = kernel.PS_ITERS):
+    n = int(getattr(a_over_c, "shape", (1,))[0]
+            if getattr(a_over_c, "ndim", 0) else 1)
     with _obs_trace.span("kernel:amva", cat="kernel",
-                         points=int(getattr(a_over_c, "shape", (1,))[0]
-                                    if getattr(a_over_c, "ndim", 0) else 1),
-                         iters=int(iters)):
+                         points=n, iters=int(iters)):
+        if getattr(a_over_c, "ndim", 0):
+            args = tuple(jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
+                         for x in (a_over_c, b, think, h_users))
+            a_over_c, b, think, h_users = _bucket_args(n, args)
+            return _ps_fixed_point_jit(a_over_c, b, think, h_users,
+                                       iters=iters)[:n]
         return _ps_fixed_point_jit(a_over_c, b, think, h_users, iters=iters)
 
 

@@ -3,6 +3,11 @@
 Zero-dependency (stdlib + optional jax profiler bridge) observability for
 the solve → fusion → kernel stack.  See docs/observability.md.
 """
+from .compile import (  # noqa: F401
+    compile_stats,
+    enable_persistent_cache,
+    reset_compile_stats,
+)
 from .metrics import (  # noqa: F401
     Counter,
     Gauge,

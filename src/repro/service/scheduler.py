@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import qn_sim
 from repro.core.evaluators import fused_eval_call
 from repro.core.hillclimb import request_id
 from repro.core.problem import ApplicationClass, VMType
@@ -165,6 +166,11 @@ class FusionScheduler:
 
         with _obs_trace.span("flush", cat="fusion", groups=len(todo),
                              points=rep.points, cached=rep.points_cached):
+            # Phase 1 — async-dispatch every fusion group's device program
+            # (marshaling the next group overlaps the device executing the
+            # previous one); phase 2 — ONE coalesced host sync for the
+            # whole round, then the cache fills.
+            inflight = []
             for fkey, group in todo.items():
                 kind, h_users, _sdig, spec = fkey[:4]
                 cks = list(group)
@@ -173,15 +179,20 @@ class FusionScheduler:
                 slots = [group[k][2] for k in cks]
                 samples = group[cks[0]][3]
                 _GROUP_SIZE.observe(len(cks))
-                ts = fused_eval_call(kind, profs, think, h_users, slots,
-                                     min_jobs=spec.min_jobs,
-                                     warmup_jobs=spec.warmup_jobs,
-                                     replications=spec.replications,
-                                     seed=spec.seed, samples=samples)
-                for ck, t in zip(cks, ts):
-                    self.cache.put(ck, float(t))
+                pending_batch = fused_eval_call(
+                    kind, profs, think, h_users, slots,
+                    min_jobs=spec.min_jobs,
+                    warmup_jobs=spec.warmup_jobs,
+                    replications=spec.replications,
+                    seed=spec.seed, samples=samples, defer=True)
+                inflight.append((cks, pending_batch))
                 rep.groups += 1
                 rep.points_dispatched += len(cks)
+            if inflight:
+                results = qn_sim.resolve_batches(p for _, p in inflight)
+                for (cks, _), ts in zip(inflight, results):
+                    for ck, t in zip(cks, ts):
+                        self.cache.put(ck, float(t))
 
         for req in pending:
             req.result = np.array(
