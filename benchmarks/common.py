@@ -43,9 +43,17 @@ def provenance() -> dict:
     except Exception:
         pass
     jax_version = None
+    devices = None
     try:
         import jax
         jax_version = jax.__version__
+        devices = len(jax.devices())
+    except Exception:
+        pass
+    shard = None
+    try:
+        from repro.core import partition
+        shard = partition.shard_info()      # spec + device count + mesh
     except Exception:
         pass
     _PROVENANCE = {
@@ -54,6 +62,9 @@ def provenance() -> dict:
         "platform": _platform.platform(),
         "python": _platform.python_version(),
         "qn_impl": os.environ.get("REPRO_QN_IMPL", "jnp"),
+        "devices": devices,
+        "repro_shard": os.environ.get("REPRO_SHARD", "auto"),
+        "shard": shard,
     }
     return _PROVENANCE
 

@@ -1,0 +1,98 @@
+"""Lane-sharded dispatch scaling: one fused QN round across D devices.
+
+One fixed fused sweep — 32 candidate configurations x R replications of
+the paper's MapReduce queueing network — executed under
+``REPRO_SHARD=D`` for D in {1, 2, 4, 8} (rows with D > the visible
+device count are skipped).  For every D the benchmark asserts the
+sharded invariants the partition layer guarantees:
+
+  * bit-parity: the per-lane response times are identical to the D=1
+    program (sharding changes placement, never values);
+  * fixed dispatch count: one fused device call per round regardless of
+    shard count;
+  * the per-device padded event budget drops as ~1/D at a fixed total
+    (the point of lane sharding: each device scans its shard's lanes
+    only).
+
+Emits ``results/BENCH_shard_scaling.json`` with one row per D.  On a
+single host device this still measures the D=1 row (and CI runs the full
+curve under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+virtual host devices share one set of cores, so ``wall_us`` is about the
+dispatch overhead trend, not real speedup — ``events_per_device`` is the
+budget curve that transfers to real multi-device hardware.
+
+Usage: PYTHONPATH=src python -m benchmarks.shard_scaling [--quick]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core import partition, qn_sim
+
+CANDIDATES = 32                       # buckets to itself on both grids
+SLOTS = [4 + 2 * i for i in range(CANDIDATES)]
+
+
+def run(quick: bool = False):
+    kw = dict(n_map=16, n_reduce=4, m_avg=900.0, r_avg=600.0,
+              think_ms=8000.0, h_users=3, slots=SLOTS,
+              min_jobs=8 if quick else 25, replications=2)
+    repeats = 3 if quick else 10
+    n_dev = partition.device_count()
+    spec0 = partition.shard_spec()
+    rows = []
+    base = None
+    try:
+        for d in (1, 2, 4, 8):
+            if d > n_dev:
+                print(f"shard_scaling: skipping D={d} "
+                      f"(only {n_dev} devices)")
+                continue
+            partition.set_shard_spec(d)
+            qn_sim.response_time_batch(**kw)          # compile + warm
+            d0 = qn_sim.dispatch_count()
+            s0 = qn_sim.sim_stats()
+            p0 = qn_sim.padding_stats()
+            with timer() as t:
+                for _ in range(repeats):
+                    out = qn_sim.response_time_batch(**kw)
+            dispatches = qn_sim.dispatch_count() - d0
+            pad = {k: v - p0[k]
+                   for k, v in qn_sim.padding_stats().items()}
+            lanes = qn_sim.sim_stats()["lanes"] - s0["lanes"]
+            assert dispatches == repeats, \
+                f"D={d}: {dispatches} dispatches for {repeats} rounds"
+            if base is None:
+                base = out
+                events_total_1 = pad["events_total"]
+            assert np.array_equal(base, out), f"D={d} diverged from D=1"
+            assert pad["events_total"] == events_total_1, \
+                f"D={d}: total event budget changed under sharding"
+            rows.append({
+                "D": d,
+                "wall_us": t.s / repeats * 1e6,
+                "lanes": lanes // repeats,
+                "events_total": pad["events_total"] // repeats,
+                "events_per_device": pad["events_total"] // repeats // d,
+                "shard_padded_events": pad["shard_padded_events"]
+                // repeats,
+                "parity": True,
+            })
+    finally:
+        partition.set_shard_spec(spec0)
+
+    per_dev = {r["D"]: r["events_per_device"] for r in rows}
+    for r in rows:
+        assert r["events_per_device"] * r["D"] == per_dev[1] * 1, \
+            "per-device budget is not 1/D of the single-device budget"
+    curve = ";".join(f"D{r['D']}={r['events_per_device']}" for r in rows)
+    emit("shard_scaling", rows[-1]["wall_us"],
+         f"devices={n_dev};parity=True;events_per_device:{curve}",
+         metrics={"rows": rows, "devices": n_dev})
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import partition as _partition
 from repro.core import qn_sim
 from repro.core import shapes as _shapes
 from repro.core.mva import ps_response, workload_demand
@@ -405,8 +406,12 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
     max_slots = _shapes.bucket_slots(int(sl.max()))
 
     # Bucket the candidate axis (replicating the last candidate) so sweeps
-    # of nearby widths share one compiled program.
-    C_pad = _shapes.bucket_lanes(C)
+    # of nearby widths share one compiled program; with lane sharding the
+    # grid is device-aware (`shards` equal bucketed shards — see
+    # ``repro.core.partition``).
+    shards = _partition.shard_count(C)
+    C_single = _shapes.bucket_lanes(C)
+    C_pad = _partition.bucket_lanes(C, shards)
     if C_pad > C:
         pad = lambda x: np.concatenate(
             [x, np.repeat(x[-1:], C_pad - C, axis=0)])
@@ -420,23 +425,36 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
     if samples is not None:
         smp = jnp.asarray(np.asarray(samples, np.float32))
 
+    shard_pad = max(C_pad - C_single, 0)
+    bucket_pad = (C_pad - C) - shard_pad
     qn_sim._count_dispatch(
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
         events_useful=int(n_ev[:C].sum()) * R,
-        bucket_padded_lanes=(C_pad - C) * R,
-        bucket_padded_events=scan_len * (C_pad - C) * R)
-    _span = _obs_trace.span("kernel:dag", cat="kernel", lanes=C_pad * R,
-                            candidates=C, scan_len=scan_len,
-                            replay=smp is not None)
-    with _span:
-        mean, cnt = _dag_sim_batch_jit(
+        bucket_padded_lanes=bucket_pad * R,
+        bucket_padded_events=scan_len * bucket_pad * R,
+        shard_padded_lanes=shard_pad * R,
+        shard_padded_events=scan_len * shard_pad * R,
+        devices=shards)
+    statics = dict(h_users=int(h_users), max_slots=max_slots,
+                   n_events=scan_len, warmup_jobs=warmup_jobs,
+                   has_samples=smp is not None)
+    lane_args = (
         jnp.asarray(rep(nt), jnp.int32), jnp.asarray(rep(ta), jnp.float32),
         jnp.asarray(rep(tk)), jnp.asarray(rep(sl), jnp.int32),
         jnp.asarray(seeds, jnp.int32), jnp.asarray(rep(n_ev), jnp.int32),
-        jnp.asarray(rep(ns), jnp.int32), smp,
-        h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
-        warmup_jobs=warmup_jobs, has_samples=smp is not None)
+        jnp.asarray(rep(ns), jnp.int32))
+    _span = _obs_trace.span("kernel:dag", cat="kernel", lanes=C_pad * R,
+                            candidates=C, scan_len=scan_len,
+                            replay=smp is not None, devices=shards,
+                            shard_lanes=C_pad * R // shards)
+    with _span:
+        if shards > 1:
+            mean, cnt = _partition.shard_call(
+                _dag_sim_batch_jit, lane_args, (smp,), shards=shards,
+                **statics)
+        else:
+            mean, cnt = _dag_sim_batch_jit(*lane_args, smp, **statics)
     pending = qn_sim.PendingBatch(mean, cnt, C, R)
     return pending if defer else pending.resolve()
 

@@ -34,6 +34,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import dag as dag_mod
+from repro.core import partition as _partition
 from repro.core import qn_sim
 from repro.core.mva import job_response, ps_response_batch, workload_demand
 from repro.obs import trace as _obs_trace
@@ -198,7 +199,8 @@ def fused_eval_call(kind: str, profs: Sequence["object"],
               replications=replications, seed=seed, defer=defer)
     with _obs_trace.span("fused_dispatch", cat="fusion", kind=kind,
                          points=len(profs), h_users=int(h_users),
-                         replay=samples is not None):
+                         replay=samples is not None,
+                         devices=_partition.shard_count(len(profs))):
         if kind == DAG:
             return fused_dag_call(profs, think_ms, h_users, slots,
                                   samples=samples, **kw)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import partition as _partition
 from repro.core import shapes as _shapes
 from repro.obs import compile as _obs_compile
 from repro.obs import metrics as _obs_metrics
@@ -326,12 +327,20 @@ def default_impl() -> str:
 
 
 def _batch_sim_fn(impl):
+    return _batch_sim_fns(impl)[0]
+
+
+def _batch_sim_fns(impl):
+    """(outer, inner) batch simulators for ``impl``: ``outer`` is the
+    public single-device entry point (spans included), ``inner`` the bare
+    jitted program ``partition.shard_call`` wraps in ``shard_map`` — the
+    sharded path opens its span at the dispatch site instead."""
     impl = _DEFAULT_IMPL if impl is None else impl
     if impl == "jnp":
-        return _sim_batch_jit
+        return _sim_batch_jit, _sim_batch_jit
     if impl == "pallas":
         from repro.kernels.qn_event import ops as qn_event_ops
-        return qn_event_ops.sim_batch
+        return qn_event_ops.sim_batch, qn_event_ops._sim_batch_jit
     raise ValueError(f"impl must be one of {QN_IMPLS}, got {impl!r}")
 
 
@@ -365,6 +374,14 @@ _QN_COUNTERS = {k: _REG.counter(f"qn.{k}") for k in _SIM_STAT_KEYS}
 # don't conflate them.
 _QN_BUCKET = {k: _REG.counter(f"qn.bucket_{k}") for k in
               ("padded_lanes", "padded_events")}
+# Shard-induced padding, tracked separately again: rounding the candidate
+# axis to a multiple of the shard count (partition.bucket_lanes) can pad
+# beyond the single-device bucket would have.  ``qn.devices`` records the
+# shard count of the most recent fused dispatch (1 for scalar paths).
+_QN_SHARD = {k: _REG.counter(f"qn.shard_{k}") for k in
+             ("padded_lanes", "padded_events")}
+_QN_DEVICES = _REG.gauge(
+    "qn.devices", help="lane shards (devices) of the last fused dispatch")
 _QN_WASTE = _REG.gauge(
     "qn.padded_waste_ratio",
     help="1 - events_useful/events_total over process lifetime")
@@ -373,7 +390,10 @@ _QN_WASTE = _REG.gauge(
 def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
                     events_total: int = 0, events_useful: int = 0,
                     bucket_padded_lanes: int = 0,
-                    bucket_padded_events: int = 0) -> None:
+                    bucket_padded_events: int = 0,
+                    shard_padded_lanes: int = 0,
+                    shard_padded_events: int = 0,
+                    devices: int = 1) -> None:
     with _REG.lock:
         _QN_COUNTERS["dispatches"].inc(n)
         _QN_COUNTERS["lanes"].inc(n if lanes is None else lanes)
@@ -382,6 +402,9 @@ def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
         _QN_COUNTERS["events_useful"].inc(events_useful)
         _QN_BUCKET["padded_lanes"].inc(bucket_padded_lanes)
         _QN_BUCKET["padded_events"].inc(bucket_padded_events)
+        _QN_SHARD["padded_lanes"].inc(shard_padded_lanes)
+        _QN_SHARD["padded_events"].inc(shard_padded_events)
+        _QN_DEVICES.set(devices)
         tot = _QN_COUNTERS["events_total"].value
         if tot:
             _QN_WASTE.set(1.0 - _QN_COUNTERS["events_useful"].value / tot)
@@ -390,19 +413,26 @@ def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
 def padding_stats() -> dict:
     """Split of the padding overhead: ``bucket_padded_lanes`` /
     ``bucket_padded_events`` are the lanes (and their scan events) that
-    exist only because of lane-grid rounding; ``batch_padded_events`` is
-    the remainder of ``events_total - events_useful`` — real lanes scanned
-    past their own logical budget to the batch maximum.  All counters
-    cover every workload kind (the DAG batch reports here too) and reset
-    with ``reset_sim_stats``."""
+    exist only because of lane-grid rounding; ``shard_padded_lanes`` /
+    ``shard_padded_events`` the *additional* lanes sharding's
+    round-up-to-the-mesh padding created beyond the single-device bucket
+    (0 whenever ``REPRO_SHARD=off`` or one shard is used);
+    ``batch_padded_events`` is the remainder of ``events_total -
+    events_useful`` — real lanes scanned past their own logical budget to
+    the batch maximum.  All counters cover every workload kind (the DAG
+    batch reports here too) and reset with ``reset_sim_stats``."""
     with _REG.lock:
         total = _QN_COUNTERS["events_total"].value
         useful = _QN_COUNTERS["events_useful"].value
         b_lanes = _QN_BUCKET["padded_lanes"].value
         b_events = _QN_BUCKET["padded_events"].value
+        s_lanes = _QN_SHARD["padded_lanes"].value
+        s_events = _QN_SHARD["padded_events"].value
         return {"bucket_padded_lanes": b_lanes,
                 "bucket_padded_events": b_events,
-                "batch_padded_events": total - useful - b_events,
+                "shard_padded_lanes": s_lanes,
+                "shard_padded_events": s_events,
+                "batch_padded_events": total - useful - b_events - s_events,
                 "events_total": total, "events_useful": useful}
 
 
@@ -434,6 +464,8 @@ def reset_sim_stats() -> None:
         for c in _QN_COUNTERS.values():
             c.reset()
         for c in _QN_BUCKET.values():
+            c.reset()
+        for c in _QN_SHARD.values():
             c.reset()
         _QN_WASTE.reset()
 
@@ -625,12 +657,20 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     share one compiled executable; bucket-induced padding is counted
     separately from batch padding (``padding_stats``).
 
+    Under ``REPRO_SHARD`` (``repro.core.partition``) the padded lane axis
+    additionally executes data-parallel over a 1-D ``lanes`` device mesh:
+    the candidate axis is rounded to ``shards`` equal bucketed shards and
+    the same program runs under ``jax.shard_map`` — per-lane results are
+    bit-identical to the single-device dispatch (sharding changes
+    placement, never values), and the shard-induced extra padding is
+    accounted under ``shard_padded_*`` in ``padding_stats``.
+
     Returns a float64 array of shape (C,) of mean response times [ms]
     (``inf`` where no replication completed a job) — or, with
     ``defer=True``, a ``PendingBatch`` handle that resolves to exactly
     that array without blocking the caller on the device.
     """
-    sim_fn = _batch_sim_fn(impl)
+    outer_fn, inner_fn = _batch_sim_fns(impl)
     shape = np.broadcast_shapes(*(np.shape(np.asarray(x)) for x in
                                   (n_map, n_reduce, m_avg, r_avg,
                                    think_ms, slots)))
@@ -659,8 +699,12 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     # Pad the candidate axis to the lane grid (replicating the last
     # candidate) so sweeps of nearby widths share one compiled program —
     # vmap lanes are independent, so results for real candidates are
-    # unchanged; padded lanes are dropped below.
-    C_pad = _shapes.bucket_lanes(C)
+    # unchanged; padded lanes are dropped below.  With lane sharding the
+    # grid becomes device-aware: `shards` equal shards, each a bucketed
+    # shape, so the flat lane axis splits evenly across the mesh.
+    shards = _partition.shard_count(C)
+    C_single = _shapes.bucket_lanes(C)
+    C_pad = _partition.bucket_lanes(C, shards)
     if C_pad > C:
         pad = lambda x: np.concatenate(
             [x, np.repeat(x[-1:], C_pad - C, axis=0)])
@@ -679,21 +723,35 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
     else:
         ms = rs = None
 
+    # Shard-induced lane padding = rounding past what the single-device
+    # bucket would pad; pure grid rounding is whatever remains.
+    shard_pad = max(C_pad - C_single, 0)
+    bucket_pad = (C_pad - C) - shard_pad
     _count_dispatch(
         lanes=C_pad * R, padded_lanes=(C_pad - C) * R,
         events_total=scan_len * C_pad * R,
         events_useful=int(n_ev[:C].sum()) * R,
-        bucket_padded_lanes=(C_pad - C) * R,
-        bucket_padded_events=scan_len * (C_pad - C) * R)
+        bucket_padded_lanes=bucket_pad * R,
+        bucket_padded_events=scan_len * bucket_pad * R,
+        shard_padded_lanes=shard_pad * R,
+        shard_padded_events=scan_len * shard_pad * R,
+        devices=shards)
+    statics = dict(h_users=int(h_users), max_slots=max_slots,
+                   n_events=scan_len, warmup_jobs=warmup_jobs)
+    lane_args = (
+        jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
+        jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
+        jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),
+        jnp.asarray(rep(n_ev), jnp.int32))
     with _obs_trace.span(f"kernel:{impl or default_impl()}", cat="kernel",
                          lanes=C_pad * R, candidates=C,
-                         scan_len=scan_len, replay=ms is not None):
-        mean, cnt = sim_fn(
-            jnp.asarray(rep(nm), jnp.int32), jnp.asarray(rep(nr), jnp.int32),
-            jnp.asarray(rep(ma)), jnp.asarray(rep(ra)), jnp.asarray(rep(tk)),
-            jnp.asarray(rep(sl), jnp.int32), jnp.asarray(seeds, jnp.int32),
-            jnp.asarray(rep(n_ev), jnp.int32), ms, rs,
-            h_users=int(h_users), max_slots=max_slots, n_events=scan_len,
-            warmup_jobs=warmup_jobs)
+                         scan_len=scan_len, replay=ms is not None,
+                         devices=shards,
+                         shard_lanes=C_pad * R // shards):
+        if shards > 1:
+            mean, cnt = _partition.shard_call(
+                inner_fn, lane_args, (ms, rs), shards=shards, **statics)
+        else:
+            mean, cnt = outer_fn(*lane_args, ms, rs, **statics)
     pending = PendingBatch(mean, cnt, C, R)
     return pending if defer else pending.resolve()

@@ -13,7 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import shapes as _shapes
+from repro.core import partition as _partition
 from repro.kernels.amva import kernel
 from repro.obs import trace as _obs_trace
 
@@ -22,12 +22,13 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _bucket_args(n: int, args):
-    """Pad every (N,) operand to the lane bucket by replicating its last
-    element.  Lanes are independent fixed points, so the replicas converge
-    to the same value as the original and are sliced off on the way out —
-    nearby frontier widths then share one compiled executable."""
-    n_pad = _shapes.bucket_lanes(n) - n
+def _bucket_args(n: int, shards: int, args):
+    """Pad every (N,) operand to the (device-aware) lane bucket by
+    replicating its last element.  Lanes are independent fixed points, so
+    the replicas converge to the same value as the original and are sliced
+    off on the way out — nearby frontier widths then share one compiled
+    executable, per shard when the lane axis is device-sharded."""
+    n_pad = _partition.bucket_lanes(n, shards) - n
     if n_pad == 0:
         return args
     return tuple(jnp.concatenate(
@@ -45,14 +46,18 @@ def _ps_fixed_point_jit(a_over_c, b, think, h_users,
 def ps_fixed_point(a_over_c, b, think, h_users, iters: int = kernel.PS_ITERS):
     n = int(getattr(a_over_c, "shape", (1,))[0]
             if getattr(a_over_c, "ndim", 0) else 1)
+    shards = _partition.shard_count(n)
     with _obs_trace.span("kernel:amva", cat="kernel",
-                         points=n, iters=int(iters)):
+                         points=n, iters=int(iters), devices=shards):
         if getattr(a_over_c, "ndim", 0):
             args = tuple(jnp.broadcast_to(jnp.asarray(x, jnp.float32), (n,))
                          for x in (a_over_c, b, think, h_users))
-            a_over_c, b, think, h_users = _bucket_args(n, args)
-            return _ps_fixed_point_jit(a_over_c, b, think, h_users,
-                                       iters=iters)[:n]
+            args = _bucket_args(n, shards, args)
+            if shards > 1:
+                return _partition.shard_call(
+                    _ps_fixed_point_jit, args, shards=shards,
+                    iters=iters)[:n]
+            return _ps_fixed_point_jit(*args, iters=iters)[:n]
         return _ps_fixed_point_jit(a_over_c, b, think, h_users, iters=iters)
 
 

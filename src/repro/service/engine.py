@@ -34,6 +34,7 @@ import itertools
 import time
 from typing import Dict, List, Optional, Union
 
+from repro.core import partition as _partition
 from repro.core import qn_sim
 from repro.core.optimizer import DSpace4Cloud
 from repro.core.problem import Problem
@@ -253,6 +254,7 @@ class SolverService:
         feasible = all(s.feasible for s in report.solutions.values())
         job.state = JobState.DONE if feasible else JobState.INFEASIBLE
         self.admission.release(job.id)
+        self.scheduler.forget_job(job.id)
         _JOBS_DONE.inc()
         self.recorder.record("finish", job=job.id, state=str(job.state),
                              cost_per_h=report.total_cost_per_h,
@@ -263,6 +265,7 @@ class SolverService:
         job.error = f"{type(err).__name__}: {err}"
         job.finished_s = time.time()
         self.admission.release(job.id)
+        self.scheduler.forget_job(job.id)
         _JOBS_FAILED.inc()
         self.recorder.record("fail", job=job.id, error=job.error)
         if self.recorder_path:
@@ -310,4 +313,5 @@ class SolverService:
                 "cache": self.cache.stats(),
                 "admission": self.admission.stats.as_dict(),
                 "recorder": self.recorder.stats(),
-                "qn": qn_sim.sim_stats()}
+                "qn": qn_sim.sim_stats(),
+                "shard": _partition.shard_info()}

@@ -126,6 +126,16 @@ class FusionScheduler:
             self._digests[mkey] = got
         return got
 
+    def forget_job(self, job_id: str) -> None:
+        """Evict the memoized digests of a finished/failed job.  The memo
+        is keyed ``(job_id, class, vm)`` and jobs never resume after they
+        settle, so a long-lived service that does not evict grows it
+        without bound (one entry per class x VM per tenant, forever).
+        ``SolverService`` calls this whenever a job leaves the active
+        set."""
+        for k in [k for k in self._digests if k[0] == job_id]:
+            del self._digests[k]
+
     # -------------------------------------------------------------- flush
     def flush(self) -> List[WindowRequest]:
         """Resolve every pending request: gather cache hits, fuse the

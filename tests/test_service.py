@@ -268,3 +268,20 @@ def test_failed_job_releases_admission_budget():
     assert jobs[jid].state == JobState.FAILED
     assert jobs[jid].error
     assert adm.stats.inflight_events == 0
+
+
+def test_scheduler_digests_evicted_when_jobs_settle():
+    # the digest memo is keyed (job_id, class, vm); finished AND failed
+    # jobs must be evicted or a long-lived service leaks one entry per
+    # class x VM per tenant forever
+    svc = SolverService(window=4)
+    good = svc.submit(one_class_problem(60000.0), **KW)
+    prof = JobProfile(n_map=4, n_reduce=1, m_avg=1e9, m_max=2e9,
+                      r_avg=1e9, r_max=2e9)
+    cls = ApplicationClass(name="c", h_users=2, think_ms=1000.0,
+                           deadline_ms=10.0, profiles={"vm": prof})
+    bad = svc.submit(Problem(classes=[cls], vm_types=[VM]), **KW)
+    jobs = svc.run_until_complete()
+    assert jobs[good].state == JobState.DONE
+    assert jobs[bad].state == JobState.FAILED
+    assert svc.scheduler._digests == {}
