@@ -16,57 +16,16 @@ from __future__ import annotations
 
 import json
 import os
-import platform as _platform
-import subprocess
 import time
 from pathlib import Path
 from typing import Optional
 
+# The build stamp moved into the library (repro.obs.provenance) so the
+# flight recorder and /statz can stamp artifacts without importing the
+# benchmark harness; benchmarks keep this name as the canonical alias.
+from repro.obs.provenance import provenance
+
 RESULTS_DIR = Path(os.environ.get("REPRO_RESULTS", "results"))
-
-_PROVENANCE: Optional[dict] = None
-
-
-def provenance() -> dict:
-    """Build stamp for benchmark artifacts (computed once per process).
-    Every field degrades to ``None`` rather than failing — benchmarks must
-    run outside a git checkout or without jax just the same."""
-    global _PROVENANCE
-    if _PROVENANCE is not None:
-        return _PROVENANCE
-    sha = None
-    try:
-        sha = subprocess.run(
-            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
-            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
-        ).stdout.strip() or None
-    except Exception:
-        pass
-    jax_version = None
-    devices = None
-    try:
-        import jax
-        jax_version = jax.__version__
-        devices = len(jax.devices())
-    except Exception:
-        pass
-    shard = None
-    try:
-        from repro.core import partition
-        shard = partition.shard_info()      # spec + device count + mesh
-    except Exception:
-        pass
-    _PROVENANCE = {
-        "git_sha": sha,
-        "jax": jax_version,
-        "platform": _platform.platform(),
-        "python": _platform.python_version(),
-        "qn_impl": os.environ.get("REPRO_QN_IMPL", "jnp"),
-        "devices": devices,
-        "repro_shard": os.environ.get("REPRO_SHARD", "auto"),
-        "shard": shard,
-    }
-    return _PROVENANCE
 
 
 def _telemetry_snapshot() -> Optional[dict]:

@@ -1,0 +1,231 @@
+"""Perf-regression sentinel: fresh BENCH_*.json vs committed baselines.
+
+The perf trajectory of this repo is machine-readable — every benchmark
+emits ``results/BENCH_<name>.json`` (``benchmarks/common.emit``).  This
+tool makes that trail *enforceable*:
+
+  * ``--distill`` walks the current BENCH files and writes
+    ``results/baselines.json``: one entry per numeric metric, each with a
+    comparison policy chosen by what the number *means*;
+  * the default mode re-walks fresh BENCH files against the committed
+    baselines and emits a verdict (JSON + markdown, exit code 1 on hard
+    regressions) — the CI gate.
+
+Policies (the non-flaky split — deterministic counters gate hard, wall
+clocks only warn, because CI machines differ but seeds do not):
+
+  ``max``    fresh must not EXCEED baseline (hard).  Dispatch counts and
+             deadline violations: an increase is a real regression (the
+             whole repo exists to drive these down); a decrease is an
+             improvement and updates the baseline at the next distill.
+  ``exact``  fresh must EQUAL baseline (hard).  Booleans only — parity
+             and agreement flags (``parity_bit_exact``, ``agree``): a
+             flipped bit-parity flag is a correctness break, not noise.
+  ``band``   |fresh - baseline| within ``tol`` x |baseline| (warn).
+             Wall times, events/s, costs, and every other numeric: CI
+             hardware varies, so drift outside ±30% is flagged in the
+             verdict (and the markdown summary) but does not fail the
+             build.
+
+A BENCH file present in the baseline but missing from results/ is a
+skip (that benchmark didn't run in this job); a *metric* missing from a
+present file is a hard fail (schema drift hiding a number is how perf
+regressions go unnoticed).  A fresh file with ``"error": true`` is a
+hard fail.  Environment-dependent provenance (device counts, platform,
+timestamps) is never baselined.
+
+Update workflow: see benchmarks/README.md (run the CI benchmark set in
+``--quick`` mode, then ``python -m benchmarks.regress --distill`` and
+commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.common import RESULTS_DIR
+
+BAND_TOL = 0.30
+
+#: path fragments that must never be baselined (environment, identity,
+#: wall-clock-of-record — not performance)
+EXCLUDE = ("provenance", "unix_time", "telemetry", "derived", "name",
+           "error")
+
+
+def _walk(obj, path=()):
+    """Yield (dotted-path, leaf) for every scalar leaf of a BENCH doc."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk(v, path + (str(k),))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from _walk(v, path + (str(i),))
+    else:
+        yield ".".join(path), obj
+
+
+def classify(path: str, value):
+    """Comparison policy for one metric, from what the number means."""
+    if any(seg in path for seg in EXCLUDE):
+        return None
+    leaf = path.rsplit(".", 1)[-1]
+    if isinstance(value, bool):
+        return {"value": value, "policy": "exact"}
+    if not isinstance(value, (int, float)):
+        return None                      # strings and nulls: not metrics
+    if value != value or value in (float("inf"), float("-inf")):
+        return None                      # nan/inf: not comparable
+    if "dispatch" in leaf or leaf == "violations":
+        return {"value": value, "policy": "max"}
+    return {"value": value, "policy": "band", "tol": BAND_TOL}
+
+
+def distill(results_dir: Path) -> dict:
+    benches = {}
+    for p in sorted(results_dir.glob("BENCH_*.json")):
+        doc = json.loads(p.read_text())
+        if doc.get("error"):
+            continue                     # never baseline a crashed run
+        metrics = {}
+        for path, v in _walk(doc):
+            entry = classify(path, v)
+            if entry is not None:
+                metrics[path] = entry
+        benches[p.stem] = metrics
+    return {"_meta": {
+                "tool": "benchmarks/regress.py",
+                "band_tol": BAND_TOL,
+                "note": "update: run the CI quick benchmarks, then "
+                        "`python -m benchmarks.regress --distill` and "
+                        "commit (see benchmarks/README.md)"},
+            "benchmarks": benches}
+
+
+def compare_one(name: str, baseline: dict, fresh_doc) -> list:
+    """All findings for one benchmark; each is a dict with ``severity``
+    in {hard, warn, info, skip}."""
+    if fresh_doc is None:
+        return [{"metric": "", "severity": "skip",
+                 "detail": "BENCH file absent (benchmark not run here)"}]
+    if fresh_doc.get("error"):
+        return [{"metric": "error", "severity": "hard",
+                 "detail": f"benchmark crashed: "
+                           f"{fresh_doc.get('derived')}"}]
+    fresh = dict(_walk(fresh_doc))
+    out = []
+    for path, spec in baseline.items():
+        if path not in fresh:
+            out.append({"metric": path, "severity": "hard",
+                        "detail": "metric missing from fresh BENCH file "
+                                  "(schema drift)"})
+            continue
+        v, base = fresh[path], spec["value"]
+        policy = spec["policy"]
+        if policy == "exact":
+            if v != base:
+                out.append({"metric": path, "severity": "hard",
+                            "detail": f"{v!r} != baseline {base!r}"})
+        elif policy == "max":
+            if v > base:
+                out.append({"metric": path, "severity": "hard",
+                            "detail": f"{v} > baseline {base}"})
+            elif v < base:
+                out.append({"metric": path, "severity": "info",
+                            "detail": f"improved: {v} < baseline {base}"})
+        elif policy == "band":
+            tol = spec.get("tol", BAND_TOL)
+            lim = tol * abs(base)
+            if abs(v - base) > lim:
+                pct = (100.0 * (v - base) / base) if base else float("inf")
+                out.append({"metric": path, "severity": "warn",
+                            "detail": f"{v:g} vs baseline {base:g} "
+                                      f"({pct:+.0f}%, band ±{tol:.0%})"})
+    return out
+
+
+def compare(baselines: dict, results_dir: Path) -> dict:
+    verdict = {"benchmarks": {}, "hard": 0, "warn": 0, "info": 0,
+               "skipped": 0}
+    for name, spec in sorted(baselines["benchmarks"].items()):
+        p = results_dir / f"{name}.json"
+        doc = json.loads(p.read_text()) if p.exists() else None
+        findings = compare_one(name, spec, doc)
+        verdict["benchmarks"][name] = findings
+        for f in findings:
+            if f["severity"] == "hard":
+                verdict["hard"] += 1
+            elif f["severity"] == "warn":
+                verdict["warn"] += 1
+            elif f["severity"] == "info":
+                verdict["info"] += 1
+            else:
+                verdict["skipped"] += 1
+    verdict["ok"] = verdict["hard"] == 0
+    return verdict
+
+
+def to_markdown(verdict: dict) -> str:
+    lines = ["# Perf-regression verdict", ""]
+    status = "PASS" if verdict["ok"] else "FAIL"
+    lines.append(f"**{status}** — {verdict['hard']} hard, "
+                 f"{verdict['warn']} warn, {verdict['info']} improved, "
+                 f"{verdict['skipped']} skipped")
+    lines.append("")
+    for name, findings in verdict["benchmarks"].items():
+        flagged = [f for f in findings if f["severity"] != "info"] or None
+        if not findings:
+            lines.append(f"- `{name}`: clean")
+            continue
+        if flagged is None:
+            lines.append(f"- `{name}`: clean "
+                         f"({len(findings)} improvement(s))")
+            continue
+        lines.append(f"- `{name}`:")
+        for f in findings:
+            tag = {"hard": "FAIL", "warn": "warn",
+                   "info": "improved", "skip": "skip"}[f["severity"]]
+            metric = f" `{f['metric']}`" if f["metric"] else ""
+            lines.append(f"  - [{tag}]{metric} {f['detail']}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--results", type=Path, default=RESULTS_DIR,
+                    help="directory of BENCH_*.json files")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baselines.json (default: <results>/baselines"
+                         ".json)")
+    ap.add_argument("--distill", action="store_true",
+                    help="write the baseline file from current BENCH "
+                         "files instead of comparing")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="verdict output stem (writes <out>.json and "
+                         "<out>.md; default <results>/REGRESS_verdict)")
+    args = ap.parse_args(argv)
+    baseline_path = args.baseline or args.results / "baselines.json"
+
+    if args.distill:
+        base = distill(args.results)
+        baseline_path.write_text(json.dumps(base, indent=1) + "\n")
+        n = sum(len(m) for m in base["benchmarks"].values())
+        print(f"distilled {n} metrics from "
+              f"{len(base['benchmarks'])} benchmarks -> {baseline_path}")
+        return 0
+
+    baselines = json.loads(baseline_path.read_text())
+    verdict = compare(baselines, args.results)
+    md = to_markdown(verdict)
+    out = args.out or args.results / "REGRESS_verdict"
+    Path(f"{out}.json").write_text(json.dumps(verdict, indent=1) + "\n")
+    Path(f"{out}.md").write_text(md)
+    print(md)
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

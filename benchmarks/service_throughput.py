@@ -15,6 +15,11 @@ measurements:
   3. warm-cache resubmission: a fresh service on the spilled cache re-runs
      all eight jobs with ZERO new dispatches (asserted).
 
+After the concurrent phase the live service is scraped over HTTP
+(``serve_http``): /statz must attribute every dispatch, cache hit, and
+SLO margin per tenant — the per-job split is asserted to sum exactly to
+the scheduler's totals — and /metrics must parse as valid OpenMetrics.
+
 With ``--trace``, the whole run executes under an installed telemetry
 tracer: the concurrent-service phase is exported as Chrome trace-event
 JSON (``results/TRACE_service_throughput.json``, loadable in Perfetto),
@@ -96,6 +101,55 @@ def _check_trace(tracer) -> dict:
             "deepest_kernel_chain": chain}
 
 
+def _check_statz(svc) -> dict:
+    """Scrape the live service over HTTP and assert the per-tenant SLO
+    plane: /statz must attribute every dispatched evaluation point,
+    cache hit, and SLO margin to a tenant, and the split must sum to the
+    scheduler's own totals (no double counting, nothing unattributed).
+    Note the units: tenants are charged *points* (unique evaluations
+    they caused), not fused device dispatches — one fused round serves
+    many tenants' points."""
+    import json
+    import urllib.request
+
+    handle = svc.serve_http()
+    try:
+        with urllib.request.urlopen(handle.url + "/statz",
+                                    timeout=30) as r:
+            statz = json.loads(r.read())
+        with urllib.request.urlopen(handle.url + "/healthz",
+                                    timeout=30) as r:
+            health = json.loads(r.read())
+        with urllib.request.urlopen(handle.url + "/metrics",
+                                    timeout=30) as r:
+            obs.parse_openmetrics(r.read().decode())
+    finally:
+        svc.stop_http()
+
+    tenants = statz["tenants"]
+    assert len(tenants) == N_JOBS, f"expected {N_JOBS} tenants: {tenants}"
+    split = {k: sum(t[k] for t in tenants.values())
+             for k in ("points_dispatched", "points_cached", "points")}
+    sched = svc.scheduler.stats()
+    assert split["points_dispatched"] == sched["points_dispatched"], \
+        f"dispatch attribution leaked: {split} vs {sched}"
+    assert split["points"] == sched["points_requested"], \
+        f"point attribution leaked: {split} vs {sched}"
+    slo = statz["slo"]
+    margins = {t: slo[t]["worst_margin_ms"] for t in tenants}
+    assert all(isinstance(m, (int, float)) for m in margins.values())
+    assert health["ok"] and health["queue_depth"] == 0
+    return {
+        "tenants": len(tenants),
+        "dispatch_split": {t: tenants[t]["points_dispatched"]
+                           for t in sorted(tenants)},
+        "cache_split": {t: tenants[t]["points_cached"]
+                        for t in sorted(tenants)},
+        "worst_margin_ms": {t: margins[t] for t in sorted(margins)},
+        "violations": sum(slo[t]["violations"] for t in slo),
+    }
+
+
 def run(quick: bool = False, trace: bool = False):
     if trace:
         with obs.tracing() as tracer:
@@ -127,7 +181,8 @@ def _run(quick: bool = False):
     if os.path.exists(spill):
         os.remove(spill)                     # measure a genuinely cold start
     svc = SolverService(window=window, cache_path=spill)
-    jids = [svc.submit(p, **kw) for p in problems]
+    jids = [svc.submit(p, tag=f"tenant-{i}", **kw)
+            for i, p in enumerate(problems)]
     d0 = qn_sim.dispatch_count()
     qn0 = qn_sim.sim_stats()
     pad0 = qn_sim.padding_stats()
@@ -136,6 +191,7 @@ def _run(quick: bool = False):
     service_dispatches = qn_sim.dispatch_count() - d0
     qn = {k: v - qn0[k] for k, v in qn_sim.sim_stats().items()}
     pad = {k: v - pad0[k] for k, v in qn_sim.padding_stats().items()}
+    slo_plane = _check_statz(svc)
 
     parity = all(_job_equal(jobs[jid].report, rep)
                  for jid, rep in zip(jids, solo_reports))
@@ -177,6 +233,7 @@ def _run(quick: bool = False):
                         "batch_padded_events": pad["batch_padded_events"]}},
         "warm": {"dispatches": warm_dispatches, "wall_s": t_warm.s,
                  "cache_hit_rate": svc2.cache.hit_rate},
+        "slo_plane": slo_plane,
         "parity": parity,
     }
     save_json("service_throughput", out)

@@ -87,7 +87,28 @@ class DayPlan:
                 "qn_dispatches": self.qn_dispatches,
                 "rounds": self.rounds,
                 "windows_feasible": self.windows_feasible,
-                "contracts": [c.as_dict() for c in self.contracts]}
+                "contracts": [c.as_dict() for c in self.contracts],
+                "slo": self.slo_summary()}
+
+    def slo_summary(self) -> dict:
+        """Day-level SLO attribution: fold every window report's
+        ``RunReport.slo`` into the worst margin per hour, the worst hour
+        of the day, and the day's violation total — the per-window view
+        the deadline budget is actually spent against."""
+        margins: List[float] = []
+        violations = 0
+        for rep in self.reports:
+            s = getattr(rep, "slo", None) or {}
+            margins.append(s.get("worst_margin_ms", float("inf")))
+            violations += int(s.get("violations", 0))
+        finite = [m for m in margins if m == m and m not in
+                  (float("inf"), float("-inf"))]
+        return {"window_margin_ms": margins,
+                "worst_margin_ms": min(finite) if finite else None,
+                "worst_window": (margins.index(min(finite))
+                                 if finite else None),
+                "violations": violations,
+                "met": violations == 0}
 
 
 def _window_problem(problem: Problem, day_h: Dict[str, Sequence[int]],

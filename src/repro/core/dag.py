@@ -325,7 +325,8 @@ def dag_response_time(job: DagJob, slots: int, think_ms: float,
         common = dict(h_users=h_users, n_stages=len(job.stages),
                       max_slots=_shapes.bucket_slots(slots),
                       n_events=n_events, warmup_jobs=warmup_jobs)
-        qn_sim._count_dispatch(events_total=n_events, events_useful=n_events)
+        qn_sim._count_dispatch(events_total=n_events, events_useful=n_events,
+                               kind="dag", impl="jnp")
         if samples is not None:
             m, c = _dag_sim_replay_jit(
                 nt, ta, jnp.float32(think_ms), jnp.int32(slots),
@@ -435,7 +436,7 @@ def response_time_batch(jobs: Sequence[DagJob], think_ms, slots,
         bucket_padded_events=scan_len * bucket_pad * R,
         shard_padded_lanes=shard_pad * R,
         shard_padded_events=scan_len * shard_pad * R,
-        devices=shards)
+        devices=shards, kind="dag", impl="jnp")
     statics = dict(h_users=int(h_users), max_slots=max_slots,
                    n_events=scan_len, warmup_jobs=warmup_jobs,
                    has_samples=smp is not None)

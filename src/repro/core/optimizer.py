@@ -62,6 +62,7 @@ from repro.core.milp import rank_vm_types
 from repro.core.problem import ApplicationClass, ClassSolution, Problem, \
     VMType, solution_cost
 from repro.obs import compile as _obs_compile
+from repro.obs import slo as _obs_slo
 from repro.obs import trace as _obs_trace
 
 
@@ -91,6 +92,7 @@ class RunReport:
     qn_dispatches: int = 0        # simulator device dispatches this run
     deployment: Optional[dict] = None  # JointPlan.summary() (private cloud)
     telemetry: Optional[dict] = None   # {"qn": sim-stat deltas, "spans": ...}
+    slo: Optional[dict] = None         # obs.slo.solve_slo_summary(...)
 
     def to_json(self) -> str:
         return json.dumps({
@@ -103,6 +105,7 @@ class RunReport:
                         if self.initial else None),
             "deployment": self.deployment,
             "telemetry": self.telemetry,
+            "slo": self.slo,
         }, indent=1)
 
 
@@ -116,7 +119,8 @@ def _snapshot() -> Dict[str, Dict[str, int]]:
 
 def _report(sols: Dict[str, ClassSolution], traces: Dict[str, HCTrace],
             init: Dict[str, ClassSolution], t0: float,
-            snap0: Dict[str, Dict[str, int]]) -> RunReport:
+            snap0: Dict[str, Dict[str, int]],
+            problem=None) -> RunReport:
     """Shared epilogue of every gait: one place assembles the report, so
     all entry points stay consistent on metadata/accounting.  ``snap0`` is
     the ``_snapshot()`` taken at run start; the report's ``telemetry``
@@ -136,13 +140,16 @@ def _report(sols: Dict[str, ClassSolution], traces: Dict[str, HCTrace],
     tracer = _obs_trace.active()
     if tracer is not None:
         telemetry["spans"] = tracer.summary()
+    wall_s = time.time() - t0
+    slo = (_obs_slo.solve_slo_summary(problem, sols, wall_s)
+           if problem is not None else None)
     return RunReport(solutions=sols,
                      total_cost_per_h=solution_cost(sols),
-                     wall_s=time.time() - t0,
+                     wall_s=wall_s,
                      evals=sum(t.evals for t in traces.values()),
                      traces=traces, initial=init,
                      qn_dispatches=qn_delta["dispatches"],
-                     telemetry=telemetry)
+                     telemetry=telemetry, slo=slo)
 
 
 class DSpace4Cloud:
@@ -260,7 +267,8 @@ class DSpace4Cloud:
                     sols[name] = stop.value
             proposed = nxt
         if self.deployment is None:
-            return _report(sols, traces, init, t0, qn0)
+            return _report(sols, traces, init, t0, qn0,
+                           problem=self.problem)
 
         # ---- private cloud: pack the raced fleet; coordinate if it
         # over-commits.  The coordinator speaks the same propose/receive
@@ -280,7 +288,8 @@ class DSpace4Cloud:
                 break
             results = yield [EvalRequest(cls=cls, vm=vm, nus=list(nus))
                              for cls, vm, nus in props]
-        report = _report(plan.solutions, traces, init, t0, qn0)
+        report = _report(plan.solutions, traces, init, t0, qn0,
+                         problem=self.problem)
         report.deployment = plan.summary()
         return report
 
@@ -316,7 +325,8 @@ class DSpace4Cloud:
                         self._coordination_lanes(), self.evaluate,
                         window=self.window, traces=traces)
                     sols = plan.solutions
-                report = _report(sols, traces, init, t0, qn0)
+                report = _report(sols, traces, init, t0, qn0,
+                                 problem=self.problem)
                 if plan is not None:
                     report.deployment = plan.summary()
                 return report
@@ -400,7 +410,8 @@ class DSpace4Cloud:
                     self.problem, self.deployment, sols, lanes,
                     self.evaluate, window=self.window, traces=traces)
                 sols = plan.solutions
-            report = _report(sols, traces, init, t0, qn0)
+            report = _report(sols, traces, init, t0, qn0,
+                             problem=self.problem)
             if plan is not None:
                 report.deployment = plan.summary()
             return report

@@ -393,9 +393,17 @@ def _count_dispatch(n: int = 1, *, lanes: int = None, padded_lanes: int = 0,
                     bucket_padded_events: int = 0,
                     shard_padded_lanes: int = 0,
                     shard_padded_events: int = 0,
-                    devices: int = 1) -> None:
+                    devices: int = 1,
+                    kind: str = "mapreduce",
+                    impl: str = None) -> None:
     with _REG.lock:
         _QN_COUNTERS["dispatches"].inc(n)
+        # Labeled attribution rides beside (never instead of) the flat
+        # totals: sim_stats()/dispatch_count() read the bare counters and
+        # stay bit-identical whether or not anyone looks at labels.
+        _QN_COUNTERS["dispatches"].labels(
+            kind=kind, impl=impl if impl is not None else _DEFAULT_IMPL,
+        ).inc(n)
         _QN_COUNTERS["lanes"].inc(n if lanes is None else lanes)
         _QN_COUNTERS["padded_lanes"].inc(padded_lanes)
         _QN_COUNTERS["events_total"].inc(events_total)
@@ -501,7 +509,7 @@ def simulate(p: QNParams, replications: int = 3) -> Tuple[float, float]:
     cnts = []
     for r in range(replications):
         ne = _shapes.bucket_events(p.n_events)
-        _count_dispatch(events_total=ne, events_useful=ne)
+        _count_dispatch(events_total=ne, events_useful=ne, impl="jnp")
         with _obs_trace.span("kernel:scalar", cat="kernel", events=ne):
             m, c = _sim_jit(
                 jnp.int32(p.n_map), jnp.int32(p.n_reduce),
@@ -556,7 +564,7 @@ def response_time(n_map: int, n_reduce: int, m_avg: float, r_avg: float,
     outs, cnts = [], []
     for r in range(replications):
         ne = _shapes.bucket_events(p.n_events)
-        _count_dispatch(events_total=ne, events_useful=ne)
+        _count_dispatch(events_total=ne, events_useful=ne, impl="jnp")
         with _obs_trace.span("kernel:scalar", cat="kernel", events=ne,
                              replay=True):
             m, c = _sim_replay_jit(
@@ -735,7 +743,7 @@ def response_time_batch(n_map, n_reduce, m_avg, r_avg, think_ms,
         bucket_padded_events=scan_len * bucket_pad * R,
         shard_padded_lanes=shard_pad * R,
         shard_padded_events=scan_len * shard_pad * R,
-        devices=shards)
+        devices=shards, kind="mapreduce", impl=impl or default_impl())
     statics = dict(h_users=int(h_users), max_slots=max_slots,
                    n_events=scan_len, warmup_jobs=warmup_jobs)
     lane_args = (

@@ -1,0 +1,60 @@
+"""Build-provenance stamp shared by benchmarks and the flight recorder.
+
+One dict answers "which commit/backend produced this artifact?": git SHA,
+jax version + device count, platform, and the two env knobs that change
+the numbers (``REPRO_QN_IMPL``, ``REPRO_SHARD``).  Lives in ``obs`` (not
+``benchmarks/``) so library code — recorder dumps, the ``/statz``
+endpoint — can stamp artifacts without importing the benchmark harness;
+``benchmarks/common.provenance()`` is now a re-export of this.
+
+Every field degrades to ``None`` rather than failing: stamps must work
+outside a git checkout and without jax just the same.  Computed once per
+process (the SHA cannot change under a running solver).
+"""
+from __future__ import annotations
+
+import os
+import platform as _platform
+import subprocess
+from typing import Optional
+
+_PROVENANCE: Optional[dict] = None
+
+
+def provenance() -> dict:
+    global _PROVENANCE
+    if _PROVENANCE is not None:
+        return _PROVENANCE
+    sha = None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        pass
+    jax_version = None
+    devices = None
+    try:
+        import jax
+        jax_version = jax.__version__
+        devices = len(jax.devices())
+    except Exception:
+        pass
+    shard = None
+    try:
+        from repro.core import partition
+        shard = partition.shard_info()      # spec + device count + mesh
+    except Exception:
+        pass
+    _PROVENANCE = {
+        "git_sha": sha,
+        "jax": jax_version,
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+        "qn_impl": os.environ.get("REPRO_QN_IMPL", "jnp"),
+        "devices": devices,
+        "repro_shard": os.environ.get("REPRO_SHARD", "auto"),
+        "shard": shard,
+    }
+    return _PROVENANCE

@@ -9,8 +9,14 @@ preserved without logging every round of every healthy run.
 
 The buffer is a ``deque(maxlen=capacity)``: O(1) append, oldest events
 evicted first, eviction counted in ``dropped``.  Events are plain dicts
-(``seq``, ``t`` relative seconds, ``kind``, + free-form fields) so the
-dump is grep-able and diff-able.
+(``seq``, ``t`` monotonic relative seconds, ``wall`` unix time,
+``tenant``, ``kind``, + free-form fields) so the dump is grep-able and
+diff-able: ``t`` orders events robustly across clock steps, ``wall``
+correlates them with logs and scrapes from other processes, ``tenant``
+makes a mixed-tenant ring filterable per job.  Dumps carry a
+``provenance`` stamp (git SHA, ``REPRO_QN_IMPL``, ``REPRO_SHARD`` — see
+``repro.obs.provenance``) so a recovered black box is attributable to
+the build that wrote it.
 """
 from __future__ import annotations
 
@@ -19,6 +25,8 @@ import threading
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
+
+from .provenance import provenance as _provenance
 
 
 class FlightRecorder:
@@ -31,8 +39,10 @@ class FlightRecorder:
         self._seq = 0
         self._t0 = time.perf_counter()
 
-    def record(self, kind: str, **fields: Any) -> Dict[str, Any]:
+    def record(self, kind: str, *, tenant: Optional[str] = None,
+               **fields: Any) -> Dict[str, Any]:
         ev = {"seq": None, "t": round(time.perf_counter() - self._t0, 6),
+              "wall": round(time.time(), 6), "tenant": tenant,
               "kind": kind, **fields}
         with self._lock:
             self._seq += 1
@@ -64,6 +74,7 @@ class FlightRecorder:
         with self._lock:
             return {"capacity": self.capacity, "recorded": self._seq,
                     "dropped": self._seq - len(self._buf),
+                    "provenance": _provenance(),
                     "events": list(self._buf)}
 
     def save(self, path) -> Dict[str, Any]:

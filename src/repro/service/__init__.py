@@ -8,6 +8,7 @@ from repro.service.admission import AdmissionController, \
     estimate_job_cores, estimate_job_events
 from repro.service.cache import EvalCache, profile_hash
 from repro.service.engine import SolverService
+from repro.service.http import ScrapeServer, healthz, serve
 from repro.service.jobs import Job, JobState, parse_submission
 from repro.service.scheduler import FusionScheduler, SimSpec, WindowRequest
 
@@ -15,4 +16,5 @@ __all__ = [
     "AdmissionController", "estimate_job_cores", "estimate_job_events",
     "EvalCache", "profile_hash", "SolverService", "Job", "JobState",
     "parse_submission", "FusionScheduler", "SimSpec", "WindowRequest",
+    "ScrapeServer", "healthz", "serve",
 ]

@@ -145,10 +145,19 @@ class AdmissionController:
         return True
 
     # ----------------------------------------------------------- admission
-    def try_admit(self, job_id: str, events: int, cores: int = 0) -> str:
+    def try_admit(self, job_id: str, events: int, cores: int = 0,
+                  tenant: Optional[str] = None) -> str:
         """ADMIT (and charge the budgets), DEFER (keep queued), or SHED.
         ``cores`` is the job's physical-core demand (0 for public jobs);
-        it gates admission only when ``max_physical_cores`` is set."""
+        it gates admission only when ``max_physical_cores`` is set.
+        ``tenant`` additionally attributes the verdict to a tenant-labeled
+        child of the process-wide ``admission.*`` counters."""
+
+        def _count(verdict: str) -> None:
+            _VERDICTS[verdict].inc()
+            if tenant is not None:
+                _VERDICTS[verdict].labels(tenant=tenant).inc()
+
         events = int(events)
         cores = int(cores)
         oversize = events > self.max_inflight_events
@@ -157,11 +166,11 @@ class AdmissionController:
         if oversize:
             if self.policy == "shed":
                 self.stats.shed += 1
-                _VERDICTS[SHED].inc()
+                _count(SHED)
                 return SHED
             if self._active:                  # oversize: wait for solitude
                 self.stats.deferred += 1
-                _VERDICTS[DEFER].inc()
+                _count(DEFER)
                 return DEFER
             self.stats.oversize_admitted += 1
         else:
@@ -172,11 +181,11 @@ class AdmissionController:
                 > self.max_physical_cores
             if over_events or over_cores:
                 self.stats.deferred += 1
-                _VERDICTS[DEFER].inc()
+                _count(DEFER)
                 return DEFER
         self._active[job_id] = (events, cores)
         self.stats.admitted += 1
-        _VERDICTS[ADMIT].inc()
+        _count(ADMIT)
         self.stats.inflight_events += events
         self.stats.inflight_cores += cores
         _INFLIGHT_EVENTS.set(self.stats.inflight_events)

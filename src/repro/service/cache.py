@@ -55,15 +55,22 @@ class EvalCache:
             self.load(path)
 
     # ------------------------------------------------------------- lookups
-    def lookup(self, key: CacheKey) -> Optional[float]:
-        """Counted lookup: returns the cached value or None (a miss)."""
+    def lookup(self, key: CacheKey,
+               tenant: Optional[str] = None) -> Optional[float]:
+        """Counted lookup: returns the cached value or None (a miss).
+        ``tenant`` additionally attributes the hit/miss to a tenant-labeled
+        child counter (the flat process totals are unchanged)."""
         with self._lock:
             if key in self._d:
                 self.hits += 1
                 _CACHE["hits"].inc()
+                if tenant is not None:
+                    _CACHE["hits"].labels(tenant=tenant).inc()
                 return self._d[key]
             self.misses += 1
             _CACHE["misses"].inc()
+            if tenant is not None:
+                _CACHE["misses"].labels(tenant=tenant).inc()
             return None
 
     def get(self, key: CacheKey, default: Optional[float] = None):

@@ -41,6 +41,7 @@ from repro.core.problem import Problem
 from repro.obs import metrics as _obs_metrics
 from repro.obs import trace as _obs_trace
 from repro.obs.recorder import FlightRecorder
+from repro.obs.slo import SLOTracker
 from repro.service.admission import ADMIT, SHED, AdmissionController, \
     estimate_job_cores, estimate_job_events
 from repro.service.cache import EvalCache
@@ -54,6 +55,12 @@ _ROUND_MS = _REG.histogram(
 _ROUNDS = _REG.counter("service.rounds")
 _JOBS_DONE = _REG.counter("service.jobs_finished")
 _JOBS_FAILED = _REG.counter("service.jobs_failed")
+_JOB_WALL_MS = _REG.gauge(
+    "service.job_wall_ms",
+    help="queue-to-settle wall time of the tenant's last finished job")
+_PADDED_EVENTS = _REG.counter(
+    "service.padded_events",
+    help="padding-waste events attributed to the tenant's dispatches")
 
 
 class SolverService:
@@ -74,7 +81,8 @@ class SolverService:
                  window: int = 16, max_rounds: int = 10_000,
                  recorder: Optional[FlightRecorder] = None,
                  recorder_capacity: int = 4096,
-                 recorder_path: Optional[str] = None):
+                 recorder_path: Optional[str] = None,
+                 slo_budget: float = 0.01):
         self.cache = cache if cache is not None else EvalCache(cache_path)
         self.scheduler = FusionScheduler(self.cache)
         self.admission = admission if admission is not None \
@@ -85,10 +93,12 @@ class SolverService:
         self.recorder = recorder if recorder is not None \
             else FlightRecorder(recorder_capacity)
         self.recorder_path = recorder_path
+        self.slo = SLOTracker(budget=slo_budget)
         self._jobs: Dict[str, Job] = {}
         self._queue: List[str] = []
         self._active: List[str] = []
         self._seq = itertools.count()
+        self._http = None             # serve_http() handle (service/http)
 
     # -------------------------------------------------------------- intake
     def submit(self, problem: Union[Problem, str], *, min_jobs: int = 40,
@@ -135,14 +145,14 @@ class SolverService:
         self._jobs[job.id] = job
         if self.admission.accept_submission(len(self._queue)):
             self._queue.append(job.id)
-            self.recorder.record("submit", job=job.id, tag=tag,
-                                 classes=len(problem.classes),
+            self.recorder.record("submit", tenant=job.tenant, job=job.id,
+                                 tag=tag, classes=len(problem.classes),
                                  events_estimate=job.events_estimate)
         else:
             job.state = JobState.SHED
             job.finished_s = time.time()
-            self.recorder.record("shed", job=job.id, at="submit",
-                                 queue_len=len(self._queue))
+            self.recorder.record("shed", tenant=job.tenant, job=job.id,
+                                 at="submit", queue_len=len(self._queue))
         return job.id
 
     # ----------------------------------------------------------- admission
@@ -157,15 +167,17 @@ class SolverService:
         for i, jid in enumerate(self._queue):
             job = self._jobs[jid]
             verdict = self.admission.try_admit(jid, job.events_estimate,
-                                               job.cores_estimate)
+                                               job.cores_estimate,
+                                               tenant=job.tenant)
             if verdict == ADMIT:
                 self._activate(job)
             elif verdict == SHED:
                 job.state = JobState.SHED
                 job.finished_s = time.time()
-                self.recorder.record("shed", job=jid, at="admission")
+                self.recorder.record("shed", tenant=job.tenant, job=jid,
+                                     at="admission")
             else:
-                self.recorder.record("defer", job=jid,
+                self.recorder.record("defer", tenant=job.tenant, job=jid,
                                      events_estimate=job.events_estimate)
                 admitted_until = i
                 break
@@ -175,7 +187,7 @@ class SolverService:
     def _activate(self, job: Job) -> None:
         job.state = JobState.SOLVING
         job.started_s = time.time()
-        self.recorder.record("activate", job=job.id,
+        self.recorder.record("activate", tenant=job.tenant, job=job.id,
                              window=job.window, race=job.race)
         # the facade's own evaluator stays idle here: run_steps() proposes
         # windows and this engine satisfies them through the FusionScheduler
@@ -214,13 +226,16 @@ class SolverService:
                     req = WindowRequest(
                         job_id=jid, cls=er.cls, vm=er.vm,
                         nus=[int(n) for n in er.nus], spec=job.spec,
-                        samples=job.samples_for(er.cls.name, er.vm.name))
+                        samples=job.samples_for(er.cls.name, er.vm.name),
+                        tenant=job.tenant)
                     self.scheduler.submit(req)
                     reqs.append(req)
                 requests[jid] = reqs
 
+            qn0 = qn_sim.sim_stats()
             self.scheduler.flush()
             flush = self.scheduler.last_flush
+            self._attribute(flush, qn0, qn_sim.sim_stats())
 
             advanced, finished = 0, 0
             for jid in list(self._active):
@@ -248,6 +263,26 @@ class SolverService:
             wall_ms=round(round_ms, 3))
         return bool(self._queue or self._active)
 
+    def _attribute(self, flush, qn0: dict, qn1: dict) -> None:
+        """Fold one flush's per-job tallies into the jobs and distribute
+        the round's padding waste (events_total - events_useful deltas
+        around the flush) over tenants, proportional to the points each
+        one dispatched — the device doesn't bill padding to anyone, so
+        the tenants whose lanes forced it carry it pro rata."""
+        waste = max(0, (qn1["events_total"] - qn1["events_useful"])
+                    - (qn0["events_total"] - qn0["events_useful"]))
+        dispatched = sum(t["dispatched"] for t in flush.per_job.values())
+        for jid, tally in flush.per_job.items():
+            job = self._jobs[jid]
+            job.rounds += 1
+            job.points += tally["points"]
+            job.points_cached += tally["cached"]
+            job.points_dispatched += tally["dispatched"]
+            if waste and tally["dispatched"]:
+                share = round(waste * tally["dispatched"] / dispatched)
+                _PADDED_EVENTS.inc(share)
+                _PADDED_EVENTS.labels(tenant=job.tenant).inc(share)
+
     def _finish(self, job: Job, report) -> None:
         job.report = report
         job.finished_s = time.time()
@@ -256,7 +291,11 @@ class SolverService:
         self.admission.release(job.id)
         self.scheduler.forget_job(job.id)
         _JOBS_DONE.inc()
-        self.recorder.record("finish", job=job.id, state=str(job.state),
+        _JOBS_DONE.labels(tenant=job.tenant).inc()
+        _JOB_WALL_MS.labels(tenant=job.tenant).set(job.wall_ms)
+        self.slo.observe(job.tenant, report.slo, wall_ms=job.wall_ms)
+        self.recorder.record("finish", tenant=job.tenant, job=job.id,
+                             state=str(job.state),
                              cost_per_h=report.total_cost_per_h,
                              qn_dispatches=report.qn_dispatches)
 
@@ -267,7 +306,12 @@ class SolverService:
         self.admission.release(job.id)
         self.scheduler.forget_job(job.id)
         _JOBS_FAILED.inc()
-        self.recorder.record("fail", job=job.id, error=job.error)
+        _JOBS_FAILED.labels(tenant=job.tenant).inc()
+        _JOB_WALL_MS.labels(tenant=job.tenant).set(job.wall_ms)
+        self.slo.observe(job.tenant, None, wall_ms=job.wall_ms,
+                         failed=True)
+        self.recorder.record("fail", tenant=job.tenant, job=job.id,
+                             error=job.error)
         if self.recorder_path:
             self.recorder.save(self.recorder_path)
 
@@ -291,6 +335,14 @@ class SolverService:
         return dict(self._jobs)
 
     # ------------------------------------------------------------- results
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_jobs(self) -> int:
+        return len(self._active)
+
     def job(self, job_id: str) -> Job:
         return self._jobs[job_id]
 
@@ -314,4 +366,53 @@ class SolverService:
                 "admission": self.admission.stats.as_dict(),
                 "recorder": self.recorder.stats(),
                 "qn": qn_sim.sim_stats(),
-                "shard": _partition.shard_info()}
+                "shard": _partition.shard_info(),
+                "tenants": self.tenant_stats(),
+                "slo": self.slo.summary()}
+
+    def tenant_stats(self) -> Dict[str, dict]:
+        """Per-tenant usage attribution, folded over every job the tenant
+        submitted (a ``tag`` groups jobs into one tenant): QN points
+        requested / served-from-cache / dispatched-first, scheduling
+        rounds, job states, and wall time."""
+        out: Dict[str, dict] = {}
+        for job in self._jobs.values():
+            t = out.setdefault(job.tenant, {
+                "jobs": 0, "states": {}, "rounds": 0, "points": 0,
+                "points_cached": 0, "points_dispatched": 0,
+                "wall_ms": 0.0})
+            t["jobs"] += 1
+            t["states"][job.state] = t["states"].get(job.state, 0) + 1
+            t["rounds"] += job.rounds
+            t["points"] += job.points
+            t["points_cached"] += job.points_cached
+            t["points_dispatched"] += job.points_dispatched
+            t["wall_ms"] += job.wall_ms
+        return out
+
+    def statz(self, *, recorder_tail: int = 64) -> dict:
+        """The ``/statz`` document: per-tenant usage + SLO state, service
+        stats, and the flight-recorder tail — one JSON-ready dict."""
+        events = self.recorder.events()
+        return {"stats": self.stats(),
+                "tenants": self.tenant_stats(),
+                "slo": self.slo.summary(),
+                "jobs": {jid: j.summary()
+                         for jid, j in sorted(self._jobs.items())},
+                "recorder_tail": events[-recorder_tail:]}
+
+    # ---------------------------------------------------------- scrape API
+    def serve_http(self, host: str = "127.0.0.1", port: int = 0):
+        """Start the scrape surface (``/metrics`` + ``/healthz`` +
+        ``/statz``) on a daemon thread; returns the server handle (its
+        ``.port`` is the bound ephemeral port when ``port=0``).  Idempotent
+        per service: a second call returns the running server."""
+        if self._http is None:
+            from repro.service.http import serve
+            self._http = serve(self, host=host, port=port)
+        return self._http
+
+    def stop_http(self) -> None:
+        if self._http is not None:
+            self._http.stop()
+            self._http = None

@@ -55,9 +55,27 @@ class Job:
     error: Optional[str] = None
     events_estimate: int = 0
     cores_estimate: int = 0       # physical cores (private-cloud jobs only)
+    # per-tenant usage tallies, filled by the engine as rounds execute
+    rounds: int = 0               # scheduling rounds this job took part in
+    points: int = 0               # QN points requested across all rounds
+    points_cached: int = 0        # ... served from the shared cache
+    points_dispatched: int = 0    # ... this job was first requester of
     # engine internals: the resumable run generator + its pending windows
     _gen: object = None
     _pending: list = None
+
+    @property
+    def tenant(self) -> str:
+        """The accounting identity metrics/SLOs attribute to: the
+        submission ``tag`` when given (one tenant spanning many jobs),
+        else the job id."""
+        return self.tag or self.id
+
+    @property
+    def wall_ms(self) -> float:
+        """Queue-to-settle wall time so far (ms)."""
+        end = self.finished_s if self.finished_s is not None else time.time()
+        return (end - self.submitted_s) * 1e3
 
     def samples_for(self, cls_name: str, vm_name: str):
         if self.samples and (cls_name, vm_name) in self.samples:
@@ -66,17 +84,22 @@ class Job:
 
     def summary(self) -> dict:
         out = {"id": self.id, "state": self.state, "tag": self.tag,
+               "tenant": self.tenant,
                "classes": len(self.problem.classes),
                "events_estimate": self.events_estimate,
                "cores_estimate": self.cores_estimate,
                "submitted_s": self.submitted_s,
                "started_s": self.started_s, "finished_s": self.finished_s,
+               "rounds": self.rounds, "points": self.points,
+               "points_cached": self.points_cached,
+               "points_dispatched": self.points_dispatched,
                "error": self.error}
         if self.report is not None:
             out["total_cost_per_h"] = self.report.total_cost_per_h
             out["solutions"] = {k: v.as_dict()
                                 for k, v in self.report.solutions.items()}
             out["deployment"] = self.report.deployment
+            out["slo"] = self.report.slo
         return out
 
 

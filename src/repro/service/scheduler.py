@@ -24,7 +24,7 @@ changes dispatch *timing*, never values.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -74,6 +74,8 @@ class WindowRequest:
     #                                      native form — (m_list, r_list)
     #                                      or a (K, NS) array — or None
     result: Optional[np.ndarray] = None  # filled by flush(), aligned to nus
+    tenant: Optional[str] = None         # accounting identity for labeled
+    #                                      metrics (defaults to job_id)
 
     @property
     def rid(self) -> str:
@@ -87,6 +89,11 @@ class FlushReport:
     points_dispatched: int = 0      # unique misses sent to the device
     points_cached: int = 0          # served from the shared cache
     points_deduped: int = 0         # duplicate misses folded into one lane
+    # per-tenant attribution: job_id -> {"points", "cached", "dispatched",
+    # "deduped"}.  The FIRST requester of a missed key is charged the
+    # dispatch; same-key requesters in the same round get dedup credit —
+    # so summing "dispatched" over jobs equals points_dispatched exactly.
+    per_job: Dict[str, Dict[str, int]] = field(default_factory=dict)
 
 
 class FusionScheduler:
@@ -147,6 +154,7 @@ class FusionScheduler:
         # point -> (prof, think, slots) by cache key, grouped by fusion key
         todo: Dict[tuple, Dict[CacheKey, tuple]] = {}
         keys: Dict[int, List[CacheKey]] = {}       # id(req) -> keys per nu
+        tenants: Dict[str, str] = {}               # job_id -> tenant label
         for req in pending:
             prof = req.cls.profile_for(req.vm)
             digest, sdig = self._digest(req)
@@ -160,19 +168,32 @@ class FusionScheduler:
                 # pad freely and fuse across chain lengths)
                 fkey += (len(prof.stages),)
             keys[id(req)] = kl = []
+            tenant = req.tenant or req.job_id
+            tenants[req.job_id] = tenant
+            tally = rep.per_job.setdefault(
+                req.job_id, {"points": 0, "cached": 0, "dispatched": 0,
+                             "deduped": 0})
             for nu in req.nus:
                 ck: CacheKey = (digest, req.vm.name, int(nu), req.spec.seed)
                 kl.append(ck)
                 rep.points += 1
-                if self.cache.lookup(ck) is not None:
+                tally["points"] += 1
+                if self.cache.lookup(ck, tenant=tenant) is not None:
                     rep.points_cached += 1
+                    tally["cached"] += 1
                     continue
                 group = todo.setdefault(fkey, {})
                 if ck in group:
+                    # same-key miss already owned by an earlier requester
+                    # this round: fold into its lane, credit the dedup here
                     rep.points_deduped += 1
+                    tally["deduped"] += 1
                 else:
                     group[ck] = (prof, req.cls.think_ms,
                                  int(nu) * req.vm.slots, req.samples)
+                    # first requester of the miss is charged the dispatch
+                    tally["dispatched"] += 1
+                    rep.points_dispatched += 1
 
         with _obs_trace.span("flush", cat="fusion", groups=len(todo),
                              points=rep.points, cached=rep.points_cached):
@@ -197,7 +218,6 @@ class FusionScheduler:
                     seed=spec.seed, samples=samples, defer=True)
                 inflight.append((cks, pending_batch))
                 rep.groups += 1
-                rep.points_dispatched += len(cks)
             if inflight:
                 results = qn_sim.resolve_batches(p for _, p in inflight)
                 for (cks, _), ts in zip(inflight, results):
@@ -216,6 +236,14 @@ class FusionScheduler:
             _FUSION["points_dispatched"].inc(rep.points_dispatched)
             _FUSION["points_cached"].inc(rep.points_cached)
             _FUSION["points_deduped"].inc(rep.points_deduped)
+            for jid, tally in rep.per_job.items():
+                lbl = {"tenant": tenants[jid]}
+                _FUSION["points"].labels(**lbl).inc(tally["points"])
+                _FUSION["points_dispatched"].labels(**lbl).inc(
+                    tally["dispatched"])
+                _FUSION["points_cached"].labels(**lbl).inc(tally["cached"])
+                _FUSION["points_deduped"].labels(**lbl).inc(
+                    tally["deduped"])
         self.last_flush = rep
         return pending
 
